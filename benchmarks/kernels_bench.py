@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks: wall time of the jnp reference path on CPU (the
+Pallas kernels themselves are TPU-targeted; interpret mode is correctness-only,
+so the jnp oracle provides the timed baseline) + analytic TPU-v5e projections
+for the kernel's shapes from the roofline model."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hardware import TPU_V5E
+from repro.core.roofline import GEMM, MemOp, op_time
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _time(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n
+
+
+def bench_kernels():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # flash attention ref (CPU wall) + v5e analytic projection
+    B, Hq, Hkv, S, dh = 1, 8, 2, 1024, 128
+    q = jax.random.normal(key, (B, Hq, S, dh), jnp.float32)
+    k = jax.random.normal(key, (B, Hkv, S, dh), jnp.float32)
+    v = jax.random.normal(key, (B, Hkv, S, dh), jnp.float32)
+    f = jax.jit(lambda a, b, c: attention_ref(a, b, c))
+    t = _time(f, q, k, v)
+    proj = (
+        op_time(TPU_V5E, GEMM("qk", S, S, dh, batch=B * Hq, weight_reuse=False)).t
+        + op_time(TPU_V5E, GEMM("av", S, dh, S, batch=B * Hq, weight_reuse=False)).t
+    )
+    rows.append((f"kernel/flash_attention/S{S}", t * 1e6, f"v5e_proj_us={proj * 1e6:.0f}"))
+
+    T, D = 4096, 4096
+    x = jax.random.normal(key, (T, D), jnp.float32)
+    sc = jnp.ones((D,), jnp.float32)
+    f = jax.jit(lambda a, b: rmsnorm_ref(a, b))
+    t = _time(f, x, sc)
+    proj = op_time(TPU_V5E, MemOp("rmsnorm", 2 * T * D * 2)).t
+    rows.append((f"kernel/rmsnorm/{T}x{D}", t * 1e6, f"v5e_proj_us={proj * 1e6:.0f}"))
+    return rows

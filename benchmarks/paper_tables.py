@@ -1,0 +1,251 @@
+"""Benchmarks reproducing the paper's tables/figures with the analytic model.
+
+Each `bench_*` returns rows of (name, us_per_call, derived) where `derived`
+carries the validation quantity (relative error, bound-match, speedup...).
+"""
+
+from __future__ import annotations
+
+from repro.core.dse import NODES, build_chip, optimize_node
+from repro.core.hardware import (
+    A100_80G,
+    B200,
+    DRAM_TECH,
+    H100_SXM,
+    H200,
+    HardwareSpec,
+    MemLevel,
+    NDR_IB,
+    NetLevel,
+    NVLINK3,
+    NVLINK4,
+    NVS5_NET,
+    NVS_NET,
+    TB,
+)
+from repro.core.memory import training_memory
+from repro.core.paper_data import (
+    FIG5_SYSTEMS,
+    GPT_CONFIGS,
+    LLAMA2_CONFIGS,
+    TABLE1,
+    TABLE2,
+    TABLE4,
+)
+from repro.core.parallelism import Mapping
+from repro.core.predict import gemm_table, inference_latency, train_step_time
+
+
+# --------------------------------------------------------------------- Table 1
+def bench_table1():
+    rows = []
+    for r in TABLE1:
+        cfg = GPT_CONFIGS[r.model]
+        m = Mapping(dp=r.dp, tp=r.tp, pp=r.pp, sp=r.sp, microbatch=1,
+                    recompute=r.recompute,
+                    schedule="interleaved" if r.pp > 1 else "1f1b", vpp=2)
+        t = train_step_time(cfg, A100_80G, m, global_batch=r.batch, seq=2048).total
+        err = 100.0 * (t - r.t_ref) / r.t_ref
+        rows.append(
+            (f"table1/{r.model}-g{r.gpus}-{r.recompute}", t * 1e6, f"dE={err:+.1f}%")
+        )
+    return rows
+
+
+# --------------------------------------------------------------------- Table 2
+def bench_table2():
+    rows = []
+    for r in TABLE2:
+        cfg = LLAMA2_CONFIGS[r.model]
+        for hw, tref in ((A100_80G, r.t_a100_ms), (H100_SXM, r.t_h100_ms)):
+            t = inference_latency(cfg, hw, tp=r.tp, batch=1, prompt=200, gen=200).total
+            err = 100.0 * (t * 1e3 - tref) / tref
+            rows.append(
+                (f"table2/{r.model}-tp{r.tp}-{hw.name}", t * 1e6, f"dE={err:+.1f}%")
+            )
+    return rows
+
+
+# --------------------------------------------------------------------- Table 4
+_T4_MAP = {"qkv_proj": ("q_proj", "kv_proj"), "qk": ("qk",), "av": ("av",),
+           "o_proj": ("o_proj",), "mlp_up": ("mlp_up", "mlp_gate"),
+           "mlp_down": ("mlp_down",)}
+
+
+def bench_table4():
+    cfg = LLAMA2_CONFIGS["llama2-13b"]
+    rows = []
+    for hw, col in ((A100_80G, 1), (H100_SXM, 3)):
+        ts = gemm_table(cfg, hw, tp=1, batch=1, S=200, decode=False)
+        by_name = {t.name: t for t in ts}
+        n_match = 0
+        for gemm, t_a, b_a, t_h, b_h in TABLE4:
+            want = b_a if col == 1 else b_h
+            ops = [by_name[n] for n in _T4_MAP[gemm] if n in by_name]
+            t_us = sum(o.t for o in ops) * 1e6
+            # paper classes: compute vs memory (we fold l2 into memory)
+            got = "compute" if all(o.bound == "compute" for o in ops) else "memory"
+            ok = got == want
+            n_match += ok
+            rows.append(
+                (f"table4/{hw.name}/{gemm}", t_us, f"bound={got}/{want}:{'OK' if ok else 'X'}")
+            )
+        rows.append((f"table4/{hw.name}/match", 0.0, f"{n_match}/6"))
+    return rows
+
+
+# ----------------------------------------------------------------------- Fig 4
+def bench_fig4():
+    rows = []
+    for model, gpus, batch, tp, pp in (
+        ("gpt-22b", 8, 4, 8, 1),
+        ("gpt-175b", 64, 64, 8, 8),
+        ("gpt-530b", 280, 280, 8, 35),
+    ):
+        cfg = GPT_CONFIGS[model]
+        for rec in ("none", "selective", "full"):
+            mb = training_memory(
+                cfg, global_batch=batch, seq=2048, dp=1, tp=tp, pp=pp, sp=False,
+                microbatch=1, recompute=rec,
+            )
+            rows.append(
+                (f"fig4/{model}/{rec}", 0.0,
+                 f"mem={mb.total / 2**30:.1f}GiB(act={mb.activations / 2**30:.1f})")
+            )
+    return rows
+
+
+# ----------------------------------------------------------------------- Fig 5
+def _fig5_hw(chip: str, net: str) -> HardwareSpec:
+    base = {"a100": A100_80G, "h100": H100_SXM, "h200": H200, "b200": B200}[chip]
+    # transformer-engine precision per generation (paper §5.2): H100/H200 FP8,
+    # B200 FP4 — modeled as the effective GEMM rate + 1-byte operands
+    if chip in ("h100", "h200"):
+        base = HardwareSpec(base.name, {**base.flops, "bf16": base.flops["fp8"]},
+                            base.mem, base.net, base.compute_util, base.gemv_dram_util)
+    if chip == "b200":
+        base = HardwareSpec(base.name, {**base.flops, "bf16": base.flops["fp4"]},
+                            base.mem, base.net, base.compute_util, base.gemv_dram_util)
+    nets = {"hdr": base.net[1], "ndr": NDR_IB, "nvs": NVS_NET, "nvs5": NVS5_NET}
+    if net == "hdr":
+        from repro.core.hardware import HDR_IB
+
+        inter = HDR_IB
+    else:
+        inter = nets[net]
+    return base.with_net(inter=inter)
+
+
+def bench_fig5():
+    cfg = GPT_CONFIGS["gpt-175b"]
+    times = {}
+    for label, chip, net, batch, _ in FIG5_SYSTEMS:
+        hw = _fig5_hw(chip, net)
+        prec = 2 if chip == "a100" else 1
+        # paper-faithful: the paper's model does NOT overlap the DP gradient
+        # all-reduce with backward (dp_overlap=0) — that un-hidden inter-node
+        # term is exactly what makes NVS vs NDR a 2x+ lever in Fig 5
+        m = Mapping(dp=128, tp=8, pp=8, sp=True, microbatch=1, recompute="selective",
+                    schedule="interleaved", vpp=2, prec=prec, dp_overlap=0.0)
+        t = train_step_time(cfg, hw, m, global_batch=batch, seq=2048).total
+        # larger-batch runs amortize bubble+DP: report per-1024-sequences time
+        times[label] = t * (1024 / batch)
+    ref = times["B200-NVS-L"]
+    rows = []
+    for label, t in times.items():
+        rows.append((f"fig5/{label}", t * 1e6, f"speedup_vs_A100={times['A100-HDR'] / t:.1f}x"))
+    rows.append(("fig5/A100->B200-NVS-L", 0.0, f"{times['A100-HDR'] / ref:.1f}x (paper ~35x)"))
+    return rows
+
+
+# ----------------------------------------------------------------------- Fig 6
+def bench_fig6():
+    cfg = GPT_CONFIGS["gpt-7b"]
+    m = Mapping(dp=64, tp=4, pp=4, sp=True, microbatch=1, recompute="selective")
+    rows = []
+    for dram in ("HBM2", "HBM2E", "HBM3", "HBM4"):
+        for node in NODES:
+            p = optimize_node(cfg, node, dram, "NDR-x8", mapping=m, global_batch=512,
+                              seq=2048)
+            rows.append((f"fig6/{dram}/{node}", p.time * 1e6, f"f_core={p.f_core:.2f}"))
+    for net in ("NDR-x8", "XDR-x8", "GDR-x8"):
+        p = optimize_node(cfg, "N2", "HBM3", net, mapping=m, global_batch=512, seq=2048)
+        rows.append((f"fig6/net/{net}@N2", p.time * 1e6, f"f_core={p.f_core:.2f}"))
+    return rows
+
+
+# ----------------------------------------------------------------------- Fig 7
+def bench_fig7():
+    cfg = GPT_CONFIGS["gpt-7b"]
+    rows = []
+    for dram in ("HBM2", "HBM3", "HBM4"):
+        hw = build_chip("N2", 0.5, dram, "NDR-x8")
+        ts = [t for t in gemm_table(cfg, hw, tp=4, batch=128, S=2048, decode=False)]
+        tot = sum(t.t for t in ts)
+        frac = {b: sum(t.t for t in ts if t.bound == b) / tot for b in
+                ("compute", "memory", "l2")}
+        rows.append(
+            (f"fig7/{dram}@N2", tot * 1e6,
+             f"compute={frac['compute']:.0%},mem={frac['memory']:.0%},l2={frac['l2']:.0%}")
+        )
+    return rows
+
+
+# ----------------------------------------------------------------------- Fig 8
+def bench_fig8():
+    cfg = LLAMA2_CONFIGS["llama2-13b"]
+    rows = []
+    from repro.core.kvcache import kv_cache_bytes
+    from repro.core.operators import total_param_count
+
+    for hw in (A100_80G, H100_SXM):
+        for B in (1, 16):
+            ts = gemm_table(cfg, hw, tp=1, batch=B, S=200, decode=False)
+            gemms = [t for t in ts if t.flops > 0]
+            tot = sum(t.t for t in gemms)
+            comp = sum(t.t for t in gemms if t.bound == "compute") / tot
+            rows.append((f"fig8/{hw.name}/B{B}/prefill", tot * 1e6,
+                         f"compute_frac={comp:.0%}"))
+            dts = gemm_table(cfg, hw, tp=1, batch=B, S=400, decode=True)
+            dcomp = [t for t in dts if t.bound == "compute" and t.flops > 0]
+            rows.append((f"fig8/{hw.name}/B{B}/decode", sum(t.t for t in dts) * 1e6,
+                         f"n_compute_bound={len(dcomp)} (expect 0)"))
+        rows.append(
+            (f"fig8/{hw.name}/inset", 0.0,
+             f"weights={total_param_count(cfg) * 2 / 2**30:.1f}GiB,"
+             f"kv(B=16)={kv_cache_bytes(cfg, 16, 400) / 2**30:.2f}GiB")
+        )
+    return rows
+
+
+# ----------------------------------------------------------------------- Fig 9
+def bench_fig9():
+    cfg = LLAMA2_CONFIGS["llama2-13b"]
+    rows = []
+    order = ["GDR6", "HBM2", "HBM2E", "HBM3", "HBM3E", "HBMX"]
+    for n_gpu in (2, 8):
+        prev = None
+        for dram in order:
+            hw = A100_80G.with_dram(dram, DRAM_TECH[dram])
+            t = inference_latency(cfg, hw, tp=n_gpu, batch=1, prompt=200, gen=200).total
+            gain = "" if prev is None else f"gain={prev / t:.2f}x"
+            rows.append((f"fig9/{n_gpu}gpu/{dram}", t * 1e6, gain))
+            prev = t
+        # HBMX + NVLink4 (paper: ~12% comm gain)
+        hw = A100_80G.with_dram("HBMX", DRAM_TECH["HBMX"]).with_net(intra=NVLINK4)
+        t = inference_latency(cfg, hw, tp=n_gpu, batch=1, prompt=200, gen=200).total
+        rows.append((f"fig9/{n_gpu}gpu/HBMX+NV4", t * 1e6, f"vs_NV3={prev / t:.2f}x"))
+    return rows
+
+
+ALL = {
+    "table1": bench_table1,
+    "table2": bench_table2,
+    "table4": bench_table4,
+    "fig4": bench_fig4,
+    "fig5": bench_fig5,
+    "fig6": bench_fig6,
+    "fig7": bench_fig7,
+    "fig8": bench_fig8,
+    "fig9": bench_fig9,
+}

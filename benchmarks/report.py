@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report > experiments/report.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import DRYRUN_DIR, load_records, roofline_row
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | mesh | compile s | peak GiB/dev (raw) | peak GiB/dev (TPU-adj) | colls/layer | status |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | - | skipped (n/a) |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | - | ERROR |"
+            )
+            continue
+        m = r["memory"]
+        loop_ops = sum(o["count"] for o in r["collectives"]["ops"] if o["loop_depth"])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} | "
+            f"{fmt_bytes(m['peak_bytes_per_device'])} | "
+            f"{fmt_bytes(m.get('peak_bytes_tpu_adjusted', m['peak_bytes_per_device']))} | "
+            f"{loop_ops} | ok |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records():
+        r = roofline_row(rec)
+        if r is None:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['model_flops']:.2e} | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run cells\n")
+    print(dryrun_table())
+    print("\n## Roofline (single-pod 16x16, per step)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""§Roofline: three-term roofline per (arch x shape) cell from the dry-run.
+
+  compute    = analytic per-device FLOPs / (197 TFLOP/s bf16)
+  memory     = modeled per-device HBM bytes / 819 GB/s
+  collective = per-device collective bytes (HLO inventory x known trip counts)
+               / 50 GB/s ICI
+
+Dominant term = bottleneck; MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D
+(inference); roofline fraction = ideal-compute-time / dominant-term (how close
+the cell could get to pure-MXU time at this sharding).
+
+HLO-derived raw numbers (cost_analysis; loop bodies counted once) are included
+as a cross-check column. Reads experiments/dryrun/*.json (single-pod cells).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ALIASES, SHAPES, get_config
+from repro.core.cellcost import cell_cost
+from repro.models.transformer import Model
+
+PEAK = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+# mirror of launch.dryrun train policies (importing dryrun would set the
+# 512-device XLA flag inside the benchmark process)
+_TRAIN_MICRO = {
+    "arctic_480b": 16, "deepseek_moe_16b": 8, "rwkv6_7b": 2, "zamba2_1p2b": 2,
+}
+_TRAIN_MICRO_DEFAULT = 2
+
+
+def _trip_counts(arch: str, shape_name: str) -> dict[int, int]:
+    """Loop-depth -> multiplier for collective traffic (known static trips).
+
+    Loop nesting per step kind: train = microbatch scan > layer scan >
+    attention chunk scans; prefill/decode = layer scan > chunk scans. Depth-1
+    collectives in a train step are *per-microbatch* (the fwd/bwd layer scans
+    are depth 2) — using L here overcounted traffic ~20x in the first pass.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    if cfg.family == "hybrid":
+        L = cfg.num_layers // (cfg.attn_every or cfg.num_layers)
+    else:
+        L = max(model.n_scan(), 1)
+    nq = max(shape.seq_len // cfg.attn_chunk, 1)
+    if shape.kind == "train":
+        m = _TRAIN_MICRO.get(arch, _TRAIN_MICRO_DEFAULT)
+        if m > 1:
+            return {1: m, 2: m * L, 3: m * L * 2, 4: m * L * nq}
+        return {1: L, 2: L * 2, 3: L * nq}
+    if shape.kind == "prefill":
+        return {1: L, 2: L * nq, 3: L * nq}
+    return {1: L, 2: L, 3: L}
+
+
+def load_records(mesh: str = "pod16x16") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def analytic_collective_bytes(cfg, shape, *, dp: int = 16, tp: int = 16,
+                              prec: int = 2) -> float:
+    """Per-device collective bytes from the paper's comm model (eq. 3 volumes):
+    Megatron TP all-reduces (2/layer fwd, +2 bwd for train; SP keeps volume),
+    DP gradient reduce-scatter + param all-gather (ZeRO-1), MoE dispatch a2a.
+    Consistent with the analytic compute/memory terms; the HLO inventory is
+    recorded alongside as a (conservative, loop-attribution) upper bound."""
+    from repro.core.operators import total_param_count
+
+    B, S = shape.global_batch, shape.seq_len
+    B_loc = max(B // dp, 1)
+    L = cfg.num_layers
+    rt = (tp - 1) / tp
+    rd = (dp - 1) / dp
+    n_ar = 4.0 if shape.kind == "train" else 2.0  # per layer (fwd[+bwd])
+    if shape.kind == "decode":
+        tok_bytes = B_loc * 1 * cfg.d_model * prec
+        ctx_ar = 0.0
+        if B < dp:  # context-parallel softmax partial reductions
+            ctx_ar = L * 2 * B * cfg.num_heads * 4 * 2 * rd
+        coll = L * n_ar * 2 * tok_bytes * rt + ctx_ar
+    else:
+        act_bytes = B_loc * S * cfg.d_model * prec
+        coll = L * n_ar * 2.0 * act_bytes * rt
+        if cfg.moe is not None:
+            # dispatch + combine row exchange (a2a-equivalent volume)
+            coll += L * 2 * (B_loc * S * cfg.moe.top_k * cfg.d_model * prec) * rt
+    if shape.kind == "train":
+        P_dev = total_param_count(cfg) / tp
+        coll += 2 * 2.0 * P_dev * prec * rd  # grad RS + param AG (ZeRO-1)
+    return coll
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec["status"] != "ok":
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cc = cell_cost(cfg, shape, opt_8bit=(arch == "arctic_480b"))
+
+    t_compute = cc.flops_per_device / PEAK
+    t_memory = cc.dram_bytes_per_device / HBM_BW
+
+    trips = _trip_counts(arch, shape_name)
+    hlo_coll_bytes = 0.0
+    for op in rec["collectives"]["ops"]:
+        mult = trips.get(op["loop_depth"], 1) if op["loop_depth"] else 1
+        hlo_coll_bytes += op["bytes"] * mult
+    coll_bytes = analytic_collective_bytes(cfg, shape)
+    t_coll = coll_bytes / ICI_BW
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_ideal = cc.model_flops_global / (CHIPS * PEAK)
+    frac = t_ideal / max(terms[dominant], 1e-30)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": cc.model_flops_global,
+        "useful_ratio": cc.model_flops_global / max(cc.flops_per_device * CHIPS, 1e-30),
+        "roofline_fraction": frac,
+        "hlo_flops_raw": rec["cost"]["flops_per_device_raw"],
+        "peak_gib": rec["memory"]["peak_bytes_per_device"] / 2**30,
+        "coll_bytes": coll_bytes,
+        "hlo_coll_bytes_upper": hlo_coll_bytes,
+    }
+
+
+def bench_roofline():
+    rows = []
+    table = []
+    for rec in load_records():
+        r = roofline_row(rec)
+        if r is None:
+            continue
+        table.append(r)
+        rows.append(
+            (
+                f"roofline/{r['arch']}/{r['shape']}",
+                max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+                f"dom={r['dominant']},frac={r['roofline_fraction']:.2f},"
+                f"useful={r['useful_ratio']:.2f}",
+            )
+        )
+    out = os.path.join(DRYRUN_DIR, "..", "roofline_table.json")
+    with open(out, "w") as fh:
+        json.dump(table, fh, indent=1)
+    return rows

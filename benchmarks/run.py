@@ -1,0 +1,39 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: every paper table/figure + the §Roofline table + kernel
+microbenches. Usage: PYTHONPATH=src python -m benchmarks.run [names...]"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks.kernels_bench import bench_kernels
+    from benchmarks.paper_tables import ALL
+    from benchmarks.roofline import bench_roofline
+
+    suites = dict(ALL)
+    suites["roofline"] = bench_roofline
+    suites["kernels"] = bench_kernels
+
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        fn = suites[name]
+        t0 = time.time()
+        try:
+            for row, us, derived in fn():
+                print(f"{row},{us:.1f},{derived}")
+        except Exception as e:  # keep the harness running; report the suite
+            failures += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+        finally:
+            print(f"{name}/_elapsed,{(time.time() - t0) * 1e6:.0f},")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

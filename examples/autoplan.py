@@ -1,0 +1,16 @@
+"""The paper's model as a planning tool: pick parallelism for a 1024-chip job.
+
+  PYTHONPATH=src python examples/autoplan.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+from repro.core.hardware import TPU_V5E, A100_80G
+from repro.core.paper_data import GPT_CONFIGS
+from repro.core.planner import plan
+
+for hw, chips in ((TPU_V5E, 1024), (A100_80G, 512)):
+    print(f"=== GPT-175B on {chips} x {hw.name}, batch 512, seq 2048 ===")
+    for p in plan(GPT_CONFIGS["gpt-175b"], hw, chips, global_batch=512, seq=2048,
+                  max_tp=16, top_k=5):
+        print(" ", p.describe())

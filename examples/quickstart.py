@@ -1,0 +1,31 @@
+"""Quickstart: train a ~small model for a few hundred steps on synthetic data.
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 200]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.models.transformer import Model
+from repro.train.trainer import Trainer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--arch", default="qwen3-14b")
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced(num_layers=4, d_model=256, d_ff=512)
+model = Model(cfg)
+print(f"{cfg.name} (reduced): {model.param_count() / 1e6:.1f}M params")
+
+trainer = Trainer(model, ParallelConfig(), TrainConfig(steps=args.steps, log_every=20))
+state = trainer.init_state()
+data = Prefetcher(iter(SyntheticLM(cfg.vocab_size, 128, 16)))
+state, hist = trainer.fit(state, data, steps=args.steps)
+first, last = hist[0]["loss"], hist[-1]["loss"]
+print(f"loss {first:.3f} -> {last:.3f} ({'improved' if last < first else 'NO IMPROVEMENT'})")
+assert last < first

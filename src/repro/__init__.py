@@ -1,0 +1,8 @@
+"""repro — Optimus-JAX: performance-model-driven distributed LLM training/inference.
+
+Reproduction of "Performance Modeling and Workload Analysis of Distributed Large
+Language Model Training and Inference" (Kundu et al., 2024) as a production-style
+JAX framework. See DESIGN.md for the architecture.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,87 @@
+"""Architecture registry + input specs for every (arch x shape) cell."""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    MoECfg,
+    ParallelConfig,
+    ShapeSpec,
+    SHAPES,
+    SMOKE_SHAPES,
+    SSMCfg,
+    TrainConfig,
+)
+
+ARCHS = [
+    "zamba2_1p2b",
+    "rwkv6_7b",
+    "qwen3_14b",
+    "starcoder2_3b",
+    "h2o_danube_1p8b",
+    "minitron_8b",
+    "arctic_480b",
+    "deepseek_moe_16b",
+    "musicgen_large",
+    "pixtral_12b",
+]
+
+# CLI ids (assignment spelling) -> module names
+ALIASES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen3-14b": "qwen3_14b",
+    "starcoder2-3b": "starcoder2_3b",
+    "h2o-danube-1.8b": "h2o_danube_1p8b",
+    "minitron-8b": "minitron_8b",
+    "arctic-480b": "arctic_480b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "musicgen-large": "musicgen_large",
+    "pixtral-12b": "pixtral_12b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    module = importlib.import_module(f"repro.configs.{mod}")
+    return module.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for the model-input part of a step.
+
+    train  -> {tokens|embeds, labels}
+    prefill-> {tokens|embeds}
+    decode -> {tokens (B, 1)}  (the KV/state cache specs come from
+              Model.cache_shapes and are composed by the caller)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.input_mode == "embeds":
+        inputs = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.compute_dtype)}
+    else:
+        inputs = {"tokens": tok}
+    if shape.kind == "train":
+        inputs["labels"] = tok
+    return inputs
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason recorded when skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "skipped: pure full-attention arch — 524k dense-KV decode is excluded "
+            "by the assignment (sub-quadratic attention required); see DESIGN.md §5"
+        )
+    return True, ""

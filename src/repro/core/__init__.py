@@ -1,0 +1,8 @@
+"""repro.core — the Optimus analytical performance model (the paper's
+contribution): hierarchical-roofline operator timing, parallelism + collective
+models, memory-footprint models, KV-cache model, DSE, and the auto-parallelism
+planner. Pure Python/numpy — importing this package never touches jax device
+state (safe inside the dry-run process before XLA_FLAGS are consumed).
+"""
+
+from repro.core.hardware import HardwareSpec, get_hardware  # noqa: F401

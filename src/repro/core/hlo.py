@@ -1,0 +1,133 @@
+"""Compiled-HLO analysis: collective inventory + loop-aware cost accounting.
+
+XLA's `compiled.cost_analysis()` counts a `while` body ONCE regardless of trip
+count (verified empirically — see EXPERIMENTS.md §Methodology), and our models
+deliberately use scan-over-layers / chunked-attention loops so 32k-sequence
+steps fit in memory. This module therefore:
+
+  * parses the post-SPMD HLO text into computations,
+  * inventories every collective (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute) with its result bytes,
+  * marks whether each sits inside a while body (loop-resident), so the
+    roofline layer can apply the *known* trip counts (num scanned layers,
+    chunk counts) that the HLO itself cannot carry.
+
+The authoritative FLOP/byte numbers for §Roofline come from the analytic
+operator graph in `repro.core.operators` (the paper's own methodology); the
+raw cost_analysis numbers are recorded alongside as a cross-check.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in an HLO result type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int
+    shape: str
+    op_name: str
+    loop_depth: int  # number of enclosing while bodies (from JAX metadata)
+
+    @property
+    def in_loop(self) -> bool:
+        return self.loop_depth > 0
+
+
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    """Inventory collectives using JAX-emitted metadata for loop residency.
+
+    Every op lowered from inside a lax.scan/while carries
+    `metadata={op_name=".../while/body/..."}`; the count of "while/body"
+    segments gives the loop-nesting depth (e.g. a TP all-reduce inside the
+    chunked-attention scan inside the layer scan has depth 2).
+    """
+    ops: list[CollectiveOp] = []
+    for ln in hlo_text.splitlines():
+        # skip async -done halves so -start/-done pairs count once
+        if "-done(" in ln:
+            continue
+        for kind in COLLECTIVE_KINDS:
+            if f" {kind}(" in ln or f" {kind}-start(" in ln:
+                rhs = ln.split("=", 1)[1] if "=" in ln else ln
+                shape_part = rhs.split(kind + "(")[0].split(kind + "-start(")[0]
+                m = _OP_NAME_RE.search(ln)
+                op_name = m.group(1) if m else ""
+                ops.append(
+                    CollectiveOp(
+                        kind=kind,
+                        bytes=_shape_bytes(shape_part),
+                        shape=shape_part.strip(),
+                        op_name=op_name,
+                        loop_depth=op_name.count("while/body"),
+                    )
+                )
+                break
+    return ops
+
+
+def collective_summary(hlo_text: str) -> dict:
+    """Aggregated collective stats for a compiled module (per-device bytes)."""
+    ops = parse_collectives(hlo_text)
+    agg: dict[tuple[str, int], dict] = {}
+    for op in ops:
+        k = (op.kind, op.loop_depth)
+        a = agg.setdefault(
+            k, {"kind": op.kind, "loop_depth": op.loop_depth, "count": 0, "bytes": 0}
+        )
+        a["count"] += 1
+        a["bytes"] += op.bytes
+    out = sorted(agg.values(), key=lambda a: -a["bytes"])
+    return {
+        "ops": out,
+        "once_bytes": sum(a["bytes"] for a in out if a["loop_depth"] == 0),
+        "loop_bytes_per_iter": sum(a["bytes"] for a in out if a["loop_depth"] > 0),
+        "n_ops": len(ops),
+    }
+
+
+def collective_traffic_bytes(summary: dict, trip_counts: dict[int, int] | int) -> int:
+    """Total per-device collective bytes with loop-resident ops multiplied.
+
+    `trip_counts`: either a single multiplier for all loop-resident ops, or a
+    {depth: multiplier} map (depth-2 ops get e.g. L * n_chunks).
+    """
+    total = summary["once_bytes"]
+    for a in summary["ops"]:
+        d = a["loop_depth"]
+        if d == 0:
+            continue
+        mult = trip_counts if isinstance(trip_counts, int) else trip_counts.get(d, 1)
+        total += a["bytes"] * mult
+    return int(total)

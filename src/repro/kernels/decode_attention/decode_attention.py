@@ -1,0 +1,97 @@
+"""Pallas TPU flash-decode: single-token GQA attention over a KV cache.
+
+This is the paper's skinny-GEMM/GEMV regime (Table 4, §6.1): per kv-head the
+kernel streams the (T, dh) cache through VMEM in block_k chunks and performs
+(G, dh) x (dh, block_k) matmuls — arithmetic intensity ~G, so the op is HBM
+bandwidth-bound exactly as the paper's roofline classifies it. The number of
+valid cache slots (`n_valid`) arrives via scalar prefetch so fully-invalid
+blocks are skipped before any DMA-issued compute.
+
+Grid: (B, Hkv, kv_blocks), kv innermost (sequential) with online-softmax
+scratch carry, G = Hq/Hkv query heads processed together per kv head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _decode_kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, n_kv: int):
+    ki = pl.program_id(2)
+    n_valid = nv_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * block_k < n_valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, dh)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, dh)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, block_k)
+        slot = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(slot < n_valid, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, n_valid, *, scale: float | None = None,
+                 block_k: int = 512, interpret: bool = False):
+    """q: (B, Hkv, G, dh); k/v: (B, Hkv, T, dh); n_valid: () int32."""
+    B, Hkv, G, dh = q.shape
+    T = k.shape[2]
+    assert T % block_k == 0, (T, block_k)
+    nk = T // block_k
+    scale = dh**-0.5 if scale is None else scale
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k, n_kv=nk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, ki, nv: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b, h, ki, nv: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b, h, ki, nv: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, ki, nv: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(n_valid, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,30 @@
+"""jit'd wrapper for flash-decode: model layout + padding + interpret fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import flash_decode
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, n_valid, *, block_k: int = 512):
+    """q: (B, Hkv, G, dh); k/v: (B, Hkv, T, dh); n_valid: scalar int32.
+
+    Pads the cache length to a block multiple (padding slots are masked by the
+    kernel's n_valid comparison, never attended).
+    """
+    T = k.shape[2]
+    bk = min(block_k, T)
+    pad = (-T) % bk
+    if pad:
+        z = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k, v = jnp.pad(k, z), jnp.pad(v, z)
+    return flash_decode(q, k, v, n_valid, block_k=bk, interpret=not _on_tpu())

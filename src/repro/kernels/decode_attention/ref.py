@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash-decode (masked GQA attention over a cache)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, n_valid, *, scale: float | None = None):
+    """q: (B, Hkv, G, dh); k/v: (B, Hkv, T, dh); n_valid: () int32."""
+    dh = q.shape[-1]
+    scale = dh**-0.5 if scale is None else scale
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    T = k.shape[2]
+    valid = jnp.arange(T) < n_valid
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgk,bhkd->bhgd", p.astype(v.dtype), v)

@@ -1,0 +1,117 @@
+"""Pallas TPU flash-attention forward (causal, GQA, optional sliding window).
+
+TPU-native blocking (DESIGN.md §3): the grid is (batch*q_heads, q_blocks,
+kv_blocks) with the kv axis innermost — TPU grids execute sequentially over
+the trailing axis, so the online-softmax state (m, l, acc) lives in VMEM
+scratch and carries across kv steps. Q/K/V blocks are VMEM-resident via
+BlockSpec; the MXU sees (block_q, head_dim) x (head_dim, block_k) matmuls with
+hardware-aligned dims (multiples of 128 by default).
+
+Causality and sliding windows are handled two ways:
+  * whole-block skip via pl.when (no MXU work issued for fully-masked blocks),
+  * within-block masking for the diagonal/window-edge blocks.
+
+m/l scratch is (block_q, 128) lane-replicated, the standard TPU idiom (scalars
+cannot live in 8x128-tiled VMEM efficiently).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+               block_q: int, block_k: int, window: int | None, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level causal/window liveness
+    live = k_start <= q_start + block_q - 1
+    if window is not None:
+        live &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, dh)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, dh)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]  # (block_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)  # (block_q, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, scale: float | None = None,
+                        window: int | None = None, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """q: (B, Hq, S, dh); k, v: (B, Hkv, S, dh) -> (B, Hq, S, dh). Causal."""
+    B, Hq, S, dh = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    scale = dh**-0.5 if scale is None else scale
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, block_q=block_q, block_k=block_k, window=window,
+        n_kv=nk,
+    )
+    grid = (B * Hq, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda bh, qi, ki, G=G, Hq=Hq: (bh // Hq, (bh % Hq) // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda bh, qi, ki, G=G, Hq=Hq: (bh // Hq, (bh % Hq) // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B * Hq, S, dh), k, v).reshape(B, Hq, S, dh)

@@ -1,0 +1,45 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles layout adaptation ((B, S, Hkv, G, dh) model layout <-> (B, H, S, dh)
+kernel layout), block-size selection, padding to block multiples, and
+interpret-mode fallback on CPU (the kernel body runs in the Pallas interpreter
+for correctness validation; on TPU it compiles to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k"))
+def flash_attention_bhsd(q, k, v, *, window=None, block_q=128, block_k=128):
+    """q: (B, Hq, S, dh); k/v: (B, Hkv, S, dh) — causal flash attention."""
+    S = q.shape[2]
+    bq, bk = min(block_q, S), min(block_k, S)
+    pad = (-S) % bq
+    if pad:
+        z = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = jnp.pad(q, z), jnp.pad(k, z), jnp.pad(v, z)
+    out = flash_attention_fwd(
+        q, k, v, window=window, block_q=bq, block_k=bk, interpret=not _on_tpu()
+    )
+    return out[:, :, :S] if pad else out
+
+
+def flash_attention(q, k, v, *, window=None):
+    """Model-layout entry: q (B, S, Hkv, G, dh); k/v (B, S, Hkv, dh)."""
+    B, S, Hkv, G, dh = q.shape
+    qh = jnp.moveaxis(q.reshape(B, S, Hkv * G, dh), 1, 2)
+    kh = jnp.moveaxis(k, 1, 2)
+    vh = jnp.moveaxis(v, 1, 2)
+    out = flash_attention_bhsd(qh, kh, vh, window=window)
+    return jnp.moveaxis(out, 2, 1).reshape(B, S, Hkv, G, dh)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (dense causal GQA attention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, scale: float | None = None, window: int | None = None):
+    """q: (B, Hq, S, dh); k, v: (B, Hkv, S, dh) -> (B, Hq, S, dh). Causal."""
+    B, Hq, S, dh = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = dh**-0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, G, S, dh)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    pos = jnp.arange(S)
+    mask = pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return out.reshape(B, Hq, S, dh)

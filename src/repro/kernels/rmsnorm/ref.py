@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for (fused) RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_residual_ref(x, res, scale, *, eps: float = 1e-5):
+    r = x.astype(jnp.float32) + res.astype(jnp.float32)
+    y = rmsnorm_ref(r, scale, eps=eps)
+    return y.astype(x.dtype), r.astype(x.dtype)

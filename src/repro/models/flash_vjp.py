@@ -1,0 +1,145 @@
+"""Memory-efficient differentiable chunked attention (flash-attention VJP).
+
+Why this exists: differentiating a scan whose body materializes (chunk, chunk)
+fp32 score blocks makes JAX save every block for the backward pass — O(S^2)
+residuals per layer, which is exactly what flash attention exists to avoid.
+This custom_vjp saves only (q, k, v, out, LSE) — O(S*d) — and *recomputes*
+the probability blocks during backward (Dao et al.'s dq/dk/dv recurrences),
+so 32k-token training steps fit HBM. This is the jnp twin of the Pallas
+kernel in repro/kernels/flash_attention (same blocking, same residuals).
+
+Layouts: q (B, S, Hkv, G, dh); k, v (B, S, Hkv, dh). Causal, optional window.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _blocks(x, chunk, axis=1):
+    B = x.shape[0]
+    n = x.shape[axis] // chunk
+    new = x.shape[:axis] + (n, chunk) + x.shape[axis + 1 :]
+    return jnp.moveaxis(x.reshape(new), axis, 0)
+
+
+def _mask(qi, ki, chunk, window):
+    q_pos = qi * chunk + jnp.arange(chunk)
+    k_pos = ki * chunk + jnp.arange(chunk)
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_vjp(q, k, v, window, chunk):
+    out, _ = _fwd(q, k, v, window, chunk)
+    return out
+
+
+def _fwd(q, k, v, window, chunk):
+    B, S, Hkv, G, dh = q.shape
+    nq = S // chunk
+    scale = dh**-0.5
+    qb = _blocks(q, chunk)  # (nq, B, chunk, Hkv, G, dh)
+
+    def q_step(_, inp):
+        qc, qi = inp
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * chunk, chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * chunk, chunk, 1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask(qi, ki, chunk, window)[None, None, None], s, NEG_INF)
+            m2 = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc)
+            return (m2, l2, acc * corr[..., None].astype(acc.dtype) + pv), None
+
+        init = (
+            jnp.full((B, Hkv, G, chunk), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, chunk), jnp.float32),
+            jnp.zeros((B, Hkv, G, chunk, dh), v.dtype),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nq))
+        o = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B, Hkv, G, chunk)
+        return None, (jnp.moveaxis(o, 3, 1), lse)
+
+    _, (ob, lseb) = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, S, Hkv, G, dh)
+    lse = jnp.moveaxis(lseb, 0, 3).reshape(B, Hkv, G, S)
+    return out, lse
+
+
+def _fwd_rule(q, k, v, window, chunk):
+    out, lse = _fwd(q, k, v, window, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_rule(window, chunk, res, do):
+    q, k, v, out, lse = res
+    B, S, Hkv, G, dh = q.shape
+    nq = S // chunk
+    scale = dh**-0.5
+    # D_i = rowsum(dO * O)
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq", do.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    qb = _blocks(q, chunk)
+    dob = _blocks(do, chunk)
+    lseb = jnp.moveaxis(lse.reshape(B, Hkv, G, nq, chunk), 3, 0)
+    deltab = jnp.moveaxis(delta.reshape(B, Hkv, G, nq, chunk), 3, 0)
+
+    def q_step(carry, inp):
+        dk_acc, dv_acc = carry
+        qc, doc, lsec, dc, qi = inp
+
+        def kv_step(carry2, ki):
+            dq_c, dk_a, dv_a = carry2
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * chunk, chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * chunk, chunk, 1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(_mask(qi, ki, chunk, window)[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lsec[..., None])  # (B,Hkv,G,cq,ck)
+            dv_blk = jnp.einsum("bhgqk,bqhgd->bkhd", p, doc.astype(jnp.float32))
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc.astype(jnp.float32),
+                            vc.astype(jnp.float32))
+            ds = p * (dp - dc[..., None]) * scale
+            dq_blk = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc.astype(jnp.float32))
+            dk_blk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qc.astype(jnp.float32))
+            dk_a = jax.lax.dynamic_update_slice_in_dim(
+                dk_a, jax.lax.dynamic_slice_in_dim(dk_a, ki * chunk, chunk, 1) + dk_blk,
+                ki * chunk, 1)
+            dv_a = jax.lax.dynamic_update_slice_in_dim(
+                dv_a, jax.lax.dynamic_slice_in_dim(dv_a, ki * chunk, chunk, 1) + dv_blk,
+                ki * chunk, 1)
+            return (dq_c + dq_blk, dk_a, dv_a), None
+
+        init_dq = jnp.zeros((B, chunk, Hkv, G, dh), jnp.float32)
+        (dq_c, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (init_dq, dk_acc, dv_acc), jnp.arange(nq)
+        )
+        return (dk_acc, dv_acc), dq_c
+
+    zeros_kv = jnp.zeros((B, S, Hkv, dh), jnp.float32)
+    (dk, dv), dqb = jax.lax.scan(
+        q_step, (zeros_kv, zeros_kv),
+        (qb, dob, lseb, deltab, jnp.arange(nq)),
+    )
+    dq = jnp.moveaxis(dqb, 0, 1).reshape(B, S, Hkv, G, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_vjp.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,221 @@
+"""Mamba2 (SSD) block: chunked-scan sequence path + O(1) recurrent decode.
+
+Chunked state-space duality algorithm (Mamba2 paper): the sequence is split
+into chunks of length Q; within a chunk the recurrence is computed as a masked
+(quadratic in Q) matmul; across chunks a linear scan carries the (H, P, N)
+state. This is the TPU-native formulation — all intra-chunk work is MXU
+einsums; the inter-chunk scan is O(S/Q).
+
+Shapes: d_inner = expand*d_model, H = d_inner/head_dim heads, state N, groups G
+(B/C shared across heads in a group, GQA-style).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PD
+from repro.parallel.axes import shard
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, H, conv_dim
+
+
+def mamba2_defs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, conv_dim = dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + H  # z, x, B, C, dt
+    return {
+        "w_in": PD((d, d_in_proj), (None, "tp"), stddev=0.02),
+        "conv_w": PD((conv_dim, s.conv_width), ("tp", None), stddev=0.1),
+        "conv_b": PD((conv_dim,), ("tp",), init="zeros"),
+        "a_log": PD((H,), ("tp",), init="constant", constant=0.5, dtype=jnp.float32),
+        "d_skip": PD((H,), ("tp",), init="ones", dtype=jnp.float32),
+        "dt_bias": PD((H,), ("tp",), init="zeros", dtype=jnp.float32),
+        "norm": PD((d_inner,), ("tp",), init="ones", dtype=jnp.float32),
+        "w_out": PD((d_inner, d), ("tp", None), stddev=0.02),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_inner, H, _ = dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn], axis=-1
+    )
+    return z, xc, Bm, Cm, dt
+
+
+def _gated_norm(scale: jax.Array, y: jax.Array, z: jax.Array, eps=1e-5) -> jax.Array:
+    dt = y.dtype
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * scale).astype(dt)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) -> L (..., Q, Q) with L[i, j] = sum_{k=j+1..i} a_k, -inf j>i."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]  # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def mamba2_seq(cfg: ModelConfig, p: dict, x: jax.Array, chunk: int = 256):
+    """Full-sequence SSD. x: (B, S, D) -> (y (B, S, D), final_state dict)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    B_, S, _ = x.shape
+    Q = min(chunk, S)
+    S0 = S
+    pad = (Q - S % Q) % Q  # zero-contribution padding: x=0, dt=0 (see below)
+    dt_c = x.dtype
+
+    zxbcdt = x @ p["w_in"].astype(dt_c)
+    z, xc, Bm, Cm, dtr = _split_proj(cfg, zxbcdt)
+
+    # causal conv over (x, B, C) concatenated
+    xbc_raw = jnp.concatenate([xc, Bm, Cm], axis=-1)  # (B, S, conv_dim)
+    conv_in = jnp.pad(xbc_raw, ((0, 0), (s.conv_width - 1, 0), (0, 0)))
+    # depthwise causal conv via stacked shifts (width is tiny, typically 4)
+    conv = sum(
+        conv_in[:, i : i + S, :] * p["conv_w"].astype(dt_c)[None, None, :, i].reshape(1, 1, -1)
+        for i in range(s.conv_width)
+    )
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(dt_c))
+
+    xh, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xh = xh.reshape(B_, S, H, P)
+    Bm = Bm.reshape(B_, S, G, N)
+    Cm = Cm.reshape(B_, S, G, N)
+    xh = shard(xh, "dp", None, "tp", None)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B, S, H)
+    A = -jnp.exp(p["a_log"])  # (H,)
+
+    if pad:
+        # pad x with zeros (no input contribution) and dt with zeros (decay=1)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    dA = dt * A  # (B, S, H), negative
+
+    # chunked layout
+    xh = xh.reshape(B_, nc, Q, H, P)
+    Br = Bm.reshape(B_, nc, Q, G, N)
+    Cr = Cm.reshape(B_, nc, Q, G, N)
+    dA = dA.reshape(B_, nc, Q, H)
+    dt = dt.reshape(B_, nc, Q, H)
+    hpg = H // G
+
+    # ---- intra-chunk (quadratic in Q) ----
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))  # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcign,bcjgn->bcgij", Cr, Br)  # (B, nc, G, Q, Q)
+    scores = jnp.repeat(scores, hpg, axis=2)  # broadcast groups -> heads
+    M = scores * Lmat * jnp.moveaxis(dt, -1, -2)[..., None, :]  # weight by dt_j
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M.astype(dt_c), xh)
+
+    # ---- chunk-local states ----
+    cum = jnp.cumsum(dA, axis=2)  # (B, nc, Q, H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, Q, H)
+    Bh = jnp.repeat(Br, hpg, axis=3)  # (B, nc, Q, H, N)
+    s_loc = jnp.einsum(
+        "bcjhn,bcjh,bcjhp->bchnp", Bh.astype(jnp.float32), decay_to_end * dt, xh.astype(jnp.float32)
+    )  # (B, nc, H, N, P)
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, nc, H)
+
+    def step(state, inp):
+        s_c, decay_c = inp  # (B, H, N, P), (B, H)
+        y_prev_state = state  # state entering this chunk
+        new = decay_c[..., None, None] * state + s_c
+        return new, y_prev_state
+
+    init = jnp.zeros((B_, H, N, P), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(s_loc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, N, P)
+
+    Ch = jnp.repeat(Cr, hpg, axis=3)  # (B, nc, Q, H, N)
+    y_inter = jnp.einsum(
+        "bcihn,bchnp,bcih->bcihp", Ch.astype(jnp.float32), prev_states, jnp.exp(cum)
+    ).astype(dt_c)
+
+    y = y_intra + y_inter + xh * p["d_skip"].astype(dt_c)[None, None, :, None]
+    y = y.reshape(B_, S, d_inner)[:, :S0]  # drop padding
+    y = _gated_norm(p["norm"], y, z)
+    out = y @ p["w_out"].astype(dt_c)
+    out = shard(out, "dp", "sp", None)
+
+    # conv cache: last (W-1) post-proj pre-conv inputs
+    conv_state = jnp.moveaxis(xbc_raw[:, S - (s.conv_width - 1) :, :], 1, 2)
+    state = {"ssd": final_state, "conv": conv_state}
+    return out, state
+
+
+def mamba2_decode(cfg: ModelConfig, p: dict, x: jax.Array, state: dict):
+    """One-token recurrent step. x: (B, 1, D) -> (y (B, 1, D), new state)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    B_ = x.shape[0]
+    dt_c = x.dtype
+    hpg = H // G
+
+    zxbcdt = x[:, 0] @ p["w_in"].astype(dt_c)  # (B, d_in_proj)
+    z, xc, Bm, Cm, dtr = _split_proj(cfg, zxbcdt)
+
+    xbc = jnp.concatenate([xc, Bm, Cm], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([state["conv"], xbc[:, :, None]], axis=-1)  # (B, conv_dim, W)
+    conv = jnp.einsum("bcw,cw->bc", window, p["conv_w"].astype(dt_c)) + p["conv_b"].astype(dt_c)
+    xbc = jax.nn.silu(conv)
+    new_conv = window[:, :, 1:]
+
+    xh, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xh = xh.reshape(B_, H, P)
+    Bm = jnp.repeat(Bm.reshape(B_, G, N), hpg, axis=1)  # (B, H, N)
+    Cm = jnp.repeat(Cm.reshape(B_, G, N), hpg, axis=1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * A)  # (B, H)
+
+    S_ = state["ssd"]  # (B, H, N, P) fp32
+    S_ = da[..., None, None] * S_ + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bm.astype(jnp.float32), dt, xh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), S_).astype(dt_c)
+    y = y + xh * p["d_skip"].astype(dt_c)[None, :, None]
+    y = y.reshape(B_, d_inner)
+    y = _gated_norm(p["norm"], y, z)
+    out = (y @ p["w_out"].astype(dt_c))[:, None, :]
+    return out, {"ssd": S_, "conv": new_conv}
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d_inner, H, conv_dim = dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, conv_dim, s.conv_width - 1), cfg.compute_dtype),
+    }
+
+
+def mamba2_state_specs(cfg: ModelConfig):
+    return {"ssd": ("dp", "tp", None, None), "conv": ("dp", "tp", None)}

@@ -1,0 +1,190 @@
+"""Mixture-of-Experts with capacity-bounded gather/scatter dispatch (EP).
+
+Design notes (TPU adaptation, see DESIGN.md §6):
+  * No giant one-hot dispatch einsums (GShard-style (T, E, C) one-hot matmuls
+    cost T*D*E*C flops — hundreds of times the useful expert flops at our
+    shapes). Instead: sort assignments by expert, compute the position of each
+    assignment within its expert via cumulative counts, and scatter rows into a
+    static (E, C+1, D) buffer (slot C is the overflow scratch row, so dropped
+    tokens never need dynamic shapes).
+  * Expert dim shards over the `ep` (= tp) mesh axes — expert parallelism;
+    capacity dim shards over `dp`. The scatter/gather between token-sharded and
+    expert-sharded layouts is exactly the all-to-all the paper's communication
+    model accounts for.
+  * Supports deepseek-style shared experts (always-on) and arctic-style dense
+    residual branch; fine-grained expert ff widths.
+
+Aux outputs: load-balancing loss (Switch-style) + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoECfg
+from repro.models.layers import activation
+from repro.models.mlp import apply_mlp, mlp_defs
+from repro.models.params import PD
+from repro.parallel.axes import shard
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    s = 0.02
+    # shard_ff_dp: experts additionally sharded over data on the ffn dim
+    # (ZeRO-3-style; transient per-layer all-gather at use)
+    ff_ax = "zero" if m.shard_ff_dp else None
+    defs = {
+        "router": PD((d, m.num_experts), (None, None), stddev=s, dtype=jnp.float32),
+        # experts: E x (d -> ff -> d), expert dim sharded over ep
+        "wi": PD((m.num_experts, d, m.d_ff), ("ep", None, ff_ax), stddev=s),
+        "wo": PD((m.num_experts, m.d_ff, d), ("ep", ff_ax, None), stddev=s),
+    }
+    if cfg.gated_mlp:
+        defs["wg"] = PD((m.num_experts, d, m.d_ff), ("ep", None, ff_ax), stddev=s)
+    if m.num_shared_experts:
+        defs["shared"] = mlp_defs(d, m.d_ff * m.num_shared_experts, cfg.gated_mlp)
+    if m.dense_residual:
+        defs["dense"] = mlp_defs(d, m.dense_d_ff or m.d_ff, cfg.gated_mlp)
+    return defs
+
+
+def capacity(m: MoECfg, tokens: int) -> int:
+    """Static per-expert capacity."""
+    c = int(m.capacity_factor * tokens * m.top_k / m.num_experts)
+    return max(c, m.top_k)
+
+
+def _n_groups(T: int) -> int:
+    """Dispatch groups = data-shard count (GShard-style grouping): routing,
+    sort and scatter/gather happen *within* a group, so under GSPMD every
+    gather is a batched gather with the group dim sharded over dp — no
+    replicated (T, D) operands (the global-argsort formulation made XLA
+    all-gather the token table per device; see EXPERIMENTS.md §Perf)."""
+    from repro.parallel.axes import axes_size
+
+    g = max(axes_size("dp"), 1)
+    while T % g:
+        g -= 1
+    return g
+
+
+def _moe_group(cfg: ModelConfig, p: dict, xf: jax.Array, C: int):
+    """Dispatch/compute/combine for one token group. xf: (Tg, D)."""
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    dt = xf.dtype
+    act = activation(cfg.act)
+    Tg = xf.shape[0]
+
+    logits = xf.astype(jnp.float32) @ p["router"]  # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, topi = jax.lax.top_k(probs, K)
+    if m.norm_topk:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    A = Tg * K
+    flat_e = topi.reshape(A)
+    order = jnp.argsort(flat_e, stable=True)  # token-priority within expert
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(A) - starts[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, pos_in_e, C)  # C = overflow scratch row
+    token_of = order // K
+
+    buf = jnp.zeros((E, C + 1, xf.shape[1]), dt)
+    buf = buf.at[sorted_e, slot].set(xf[token_of], mode="drop")
+    h = buf[:, :C]
+
+    up = jnp.einsum("ecd,edf->ecf", h, p["wi"].astype(dt))
+    if "wg" in p:
+        up = act(jnp.einsum("ecd,edf->ecf", h, p["wg"].astype(dt))) * up
+    else:
+        up = act(up)
+    out = jnp.einsum("ecf,efd->ecd", up, p["wo"].astype(dt))
+    out = jnp.concatenate([out, jnp.zeros((E, 1, xf.shape[1]), dt)], axis=1)
+
+    vals = out[sorted_e, slot]  # (A, D); dropped -> zeros row
+    w = (gate.reshape(A)[order] * keep).astype(dt)
+    y = jnp.zeros((Tg, xf.shape[1]), dt).at[token_of].add(vals * w[:, None])
+
+    stats = {
+        "me": probs.mean(axis=0),
+        "ce": counts.astype(jnp.float32) / A,
+        "z": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+        "drop": jnp.clip(1.0 - keep.mean(), 0.0, 1.0),
+    }
+    return y, stats
+
+
+def apply_moe(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x: (B, S, D) -> (y (B, S, D), aux dict with load-balance metrics)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E = m.num_experts
+    G = _n_groups(T)
+    Tg = T // G
+    C = capacity(m, Tg)
+
+    xg = x.reshape(G, Tg, D)
+    xg = shard(xg, "dp", None, None)
+
+    # vmapped per-group dispatch: batched scatters/gathers with the group dim
+    # sharded over dp; expert dim of the buffers shards over ep
+    expert_p = {k: p[k] for k in ("router", "wi", "wo", "wg") if k in p}
+
+    def one(xf):
+        return _moe_group(cfg, expert_p, xf, C)
+
+    yg, stats = jax.vmap(one)(xg)
+    yg = shard(yg, "dp", None, None)
+    y = yg.reshape(T, D)
+
+    xf = x.reshape(T, D)
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xf, cfg.act)
+    if "dense" in p:
+        y = y + apply_mlp(p["dense"], xf, cfg.act)
+
+    me = stats["me"].mean(axis=0)
+    ce = stats["ce"].mean(axis=0)
+    aux = {
+        "moe_lb_loss": E * jnp.sum(me * ce),
+        "moe_z_loss": stats["z"].mean(),
+        "moe_drop_frac": stats["drop"].mean(),
+    }
+    return y.reshape(B, S, D), aux
+
+
+def apply_moe_dense_reference(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """O(T*E) oracle: every expert on every token, masked by gates (tests only)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    act = activation(cfg.act)
+    dt = x.dtype
+    xf = x.reshape(T, D)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, topi = jax.lax.top_k(probs, m.top_k)
+    if m.norm_topk:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    dense_gate = jnp.zeros((T, m.num_experts), jnp.float32)
+    dense_gate = dense_gate.at[jnp.arange(T)[:, None], topi].set(gate)
+    up = jnp.einsum("td,edf->tef", xf, p["wi"].astype(dt))
+    if "wg" in p:
+        up = act(jnp.einsum("td,edf->tef", xf, p["wg"].astype(dt))) * up
+    else:
+        up = act(up)
+    out = jnp.einsum("tef,efd->ted", up, p["wo"].astype(dt))
+    y = jnp.einsum("ted,te->td", out, dense_gate.astype(dt))
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xf, cfg.act)
+    if "dense" in p:
+        y = y + apply_mlp(p["dense"], xf, cfg.act)
+    return y.reshape(B, S, D)

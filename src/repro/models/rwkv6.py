@@ -1,0 +1,229 @@
+"""RWKV6 "Finch": data-dependent-decay time-mix + squared-ReLU channel-mix.
+
+Attention-free: per-head (dh x dh) matrix state, O(1) per-token decode, no KV
+cache — the long-context-decode case the assignment calls out. Sequence
+processing uses a chunk-parallel formulation of the linear recurrence
+(wkv state checkpointed per chunk, intra-chunk computed as masked matmuls) so
+training/prefill are MXU-friendly rather than a length-S serial scan.
+
+Faithful-lite simplifications (recorded in DESIGN.md): the 5-way ddlerp
+token-shift LoRA and decay LoRA follow the RWKV6 structure with configurable
+inner dims; gating/norm layout matches the published block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import group_norm_heads
+from repro.models.params import PD
+from repro.parallel.axes import shard
+
+
+def heads(cfg: ModelConfig):
+    dh = cfg.ssm.head_dim
+    return cfg.d_model // dh, dh
+
+
+def rwkv6_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    H, dh = heads(cfg)
+    k = s.mix_dim
+    r = s.decay_lora
+    sd = 0.02
+    return {
+        "tm": {  # time mix
+            "maa_x": PD((d,), (None,), init="zeros"),
+            "maa": PD((5, d), (None, None), init="zeros"),  # w,k,v,r,g base mixes
+            "mix_w1": PD((d, 5 * k), (None, None), stddev=sd),
+            "mix_w2": PD((5, k, d), (None, None, None), stddev=sd),
+            "w0": PD((d,), ("tp",), init="constant", constant=-4.0, dtype=jnp.float32),
+            "w_a": PD((d, r), (None, None), stddev=sd),
+            "w_b": PD((r, d), (None, "tp"), stddev=sd),
+            "wr": PD((d, d), (None, "tp"), stddev=sd),
+            "wk": PD((d, d), (None, "tp"), stddev=sd),
+            "wv": PD((d, d), (None, "tp"), stddev=sd),
+            "wg": PD((d, d), (None, "tp"), stddev=sd),
+            "wo": PD((d, d), ("tp", None), stddev=sd),
+            "u": PD((H, dh), ("tp", None), stddev=sd, dtype=jnp.float32),  # bonus
+            "ln_x": {
+                "scale": PD((d,), ("tp",), init="ones", dtype=jnp.float32),
+                "bias": PD((d,), ("tp",), init="zeros", dtype=jnp.float32),
+            },
+        },
+        "cm": {  # channel mix
+            "mu_k": PD((d,), (None,), init="zeros"),
+            "mu_r": PD((d,), (None,), init="zeros"),
+            "wk": PD((d, cfg.d_ff), (None, "tp"), stddev=sd),
+            "wv": PD((cfg.d_ff, d), ("tp", None), stddev=sd),
+            "wr": PD((d, d), (None, "tp"), stddev=sd),
+        },
+    }
+
+
+def _ddlerp(p: dict, x: jax.Array, xprev: jax.Array):
+    """Data-dependent 5-way token-shift interpolation -> (xw, xk, xv, xr, xg)."""
+    xx = xprev - x
+    base = x + xx * p["maa_x"].astype(x.dtype)
+    k5 = jnp.tanh(base @ p["mix_w1"].astype(x.dtype))  # (..., 5k)
+    k5 = k5.reshape(*k5.shape[:-1], 5, p["mix_w2"].shape[1])
+    mixes = jnp.einsum("...fk,fkd->...fd", k5, p["mix_w2"].astype(x.dtype))
+    mixes = mixes + p["maa"].astype(x.dtype)
+    out = x[..., None, :] + xx[..., None, :] * mixes  # (..., 5, d)
+    return tuple(out[..., i, :] for i in range(5))
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Per-channel decay in (0,1): w = exp(-exp(w0 + lora(xw)))."""
+    lora = jnp.tanh(xw @ p["w_a"].astype(xw.dtype)) @ p["w_b"].astype(xw.dtype)
+    return jnp.exp(-jnp.exp(p["w0"] + lora.astype(jnp.float32)))
+
+
+def _wkv_chunk_scan(r, k, v, w, u, chunk: int, init_state=None):
+    """Chunk-scan linear recurrence with data-dependent per-channel decay.
+
+    r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K). All fp32.
+    State S_t (H,K,V): S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+    out_t = r_t (S_{t-1} + diag(u) k_t v_t^T).
+    Returns out (B,S,H,V), final state (B,H,K,V).
+
+    Stability: every exponent used is a *backward* cumulative log-decay
+    difference (<= 0), so exp never overflows regardless of how fast the
+    learned decay is — this is why the intra-chunk decay matrix is built
+    per-channel (D[i,j,k] = exp(cum_{i-1,k} - cum_{j,k}), j < i) instead of
+    the factored r*exp(cum) / k*exp(-cum) trick, which overflows for
+    fast-decaying channels. Chunk is kept small (<=32) to bound the (Q,Q,K)
+    block.
+    """
+    B, S, H, K = k.shape
+    V = v.shape[-1]
+    Q = min(chunk, S)
+    S0 = S
+    if S % Q:  # pad with identity steps: w=1 (no decay), k=v=0 (no contribution)
+        pad = Q - S % Q
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        w = jnp.pad(w, z, constant_values=1.0)
+        S = S + pad
+    nc = S // Q
+    rr = jnp.moveaxis(r.reshape(B, nc, Q, H, K), 1, 0)  # (nc,B,Q,H,K)
+    kk = jnp.moveaxis(k.reshape(B, nc, Q, H, K), 1, 0)
+    vv = jnp.moveaxis(v.reshape(B, nc, Q, H, V), 1, 0)
+    ww = jnp.moveaxis(w.reshape(B, nc, Q, H, K), 1, 0)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)  # j < i (strict)
+
+    def step(state, inp):
+        rc, kc, vc, wc = inp  # (B,Q,H,K) ...
+        logw = jnp.log(jnp.maximum(wc, 1e-38))  # <= 0
+        cum = jnp.cumsum(logw, axis=1)  # (B,Q,H,K), decreasing
+        cum_prev = cum - logw  # log prod_{t<i} w_t
+        # intra-chunk: D[i,j] = exp(cum_prev_i - cum_j) for j<i (exponent <= 0)
+        d = cum_prev[:, :, None] - cum[:, None, :]  # (B,i,j,H,K)
+        d = jnp.where(mask[None, :, :, None, None], d, -jnp.inf)
+        att_v = jnp.einsum("bihk,bjhk,bijhk->bihj", rc, kc, jnp.exp(d))
+        y = jnp.einsum("bihj,bjhv->bihv", att_v, vc)
+        # bonus (current token)
+        bonus = jnp.einsum("bihk,hk,bihk->bih", rc, u, kc)
+        y = y + bonus[..., None] * vc
+        # entering-state contribution: exponent cum_prev <= 0
+        y = y + jnp.einsum("bihk,bhkv->bihv", rc * jnp.exp(cum_prev), state)
+        # state update: exponents cum_Q - cum_j <= 0 and cum_Q <= 0
+        k_tail = kc * jnp.exp(cum[:, -1:, :, :] - cum)
+        s_loc = jnp.einsum("bjhk,bjhv->bhkv", k_tail, vc)
+        new = jnp.exp(cum[:, -1])[..., None] * state + s_loc
+        return new, y
+
+    init = jnp.zeros((B, H, K, V), jnp.float32) if init_state is None else init_state
+    final, ys = jax.lax.scan(step, init, (rr, kk, vv, ww))
+    out = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, V)
+    return out[:, :S0], final
+
+
+def time_mix_seq(cfg: ModelConfig, p: dict, x: jax.Array, chunk: int = 32):
+    """x: (B, S, D) -> (out, state dict). Sequence path."""
+    H, dh = heads(cfg)
+    B, S, D = x.shape
+    dt = x.dtype
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xprev)
+    r = (xr @ p["wr"].astype(dt)).reshape(B, S, H, dh)
+    k = (xk @ p["wk"].astype(dt)).reshape(B, S, H, dh)
+    v = (xv @ p["wv"].astype(dt)).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w = _decay(p, xw).reshape(B, S, H, dh)  # fp32
+    r = shard(r, "dp", None, "tp", None)
+    k = shard(k, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+
+    out, state = _wkv_chunk_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), w, p["u"], chunk
+    )
+    out = group_norm_heads(p["ln_x"], out.astype(dt))
+    out = (out.reshape(B, S, D) * g) @ p["wo"].astype(dt)
+    return shard(out, "dp", "sp", None), {"wkv": state, "shift": x[:, -1]}
+
+
+def time_mix_decode(cfg: ModelConfig, p: dict, x: jax.Array, state: dict):
+    """x: (B, 1, D); state: {wkv (B,H,dh,dh) fp32, shift (B, D)}."""
+    H, dh = heads(cfg)
+    B, _, D = x.shape
+    dt = x.dtype
+    xt = x[:, 0]
+    xw, xk, xv, xr, xg = _ddlerp(p, xt, state["shift"])
+    r = (xr @ p["wr"].astype(dt)).reshape(B, H, dh).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(dt)).reshape(B, H, dh).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(dt)).reshape(B, H, dh).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w = _decay(p, xw).reshape(B, H, dh)
+
+    S_ = state["wkv"]  # (B,H,K,V)
+    a = jnp.einsum("bhk,bhv->bhkv", k, v)
+    o = jnp.einsum("bhk,bhkv->bhv", r, S_ + p["u"][None, :, :, None] * a)
+    S_ = w[..., None] * S_ + a
+    o = group_norm_heads(p["ln_x"], o.astype(dt)[:, None].reshape(B, 1, H, dh))
+    out = (o.reshape(B, D) * g) @ p["wo"].astype(dt)
+    return out[:, None, :], {"wkv": S_, "shift": xt}
+
+
+def channel_mix_seq(cfg: ModelConfig, p: dict, x: jax.Array):
+    B, S, D = x.shape
+    dt = x.dtype
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    return _channel_mix(p, x, xprev, dt), {"shift": x[:, -1]}
+
+
+def channel_mix_decode(cfg: ModelConfig, p: dict, x: jax.Array, state: dict):
+    xt = x[:, 0]
+    out = _channel_mix(p, xt, state["shift"], x.dtype)
+    return out[:, None, :] if out.ndim == 2 else out, {"shift": xt}
+
+
+def _channel_mix(p: dict, x, xprev, dt):
+    xx = xprev - x
+    xk = x + xx * p["mu_k"].astype(dt)
+    xr = x + xx * p["mu_r"].astype(dt)
+    vk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt))) @ p["wv"].astype(dt)
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * vk
+    return shard(out, "dp", "sp", None) if out.ndim == 3 else out
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int) -> dict:
+    H, dh = heads(cfg)
+    D = cfg.d_model
+    return {
+        "tm": {
+            "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "shift": jnp.zeros((batch, D), cfg.compute_dtype),
+        },
+        "cm": {"shift": jnp.zeros((batch, D), cfg.compute_dtype)},
+    }
+
+
+def rwkv6_state_specs(cfg: ModelConfig):
+    return {
+        "tm": {"wkv": ("dp", "tp", None, None), "shift": ("dp", None)},
+        "cm": {"shift": ("dp", None)},
+    }

@@ -1,0 +1,166 @@
+"""Logical-axis sharding: a thin indirection between model code and mesh axes.
+
+Model code annotates tensors with *logical* axis names ("dp", "tp", "sp", "ep",
+"zero"); a `ShardingRules` instance maps each logical name to zero or more mesh
+axis names.  When no mesh is active (unit tests, single-device smoke runs) every
+sharding helper is a no-op, so the same model code runs everywhere.
+
+Logical names:
+  dp   — data-parallel axes (batch / token dims). Multi-pod: ("pod", "data").
+  tp   — tensor-parallel (Megatron) axes for weights and head dims.
+  ep   — expert-parallel axes for MoE expert dims (defaults to tp).
+  sp   — sequence-parallel axes for activation seq dims (paper §1.3 / [14]).
+  cp   — context-parallel axes for long-context KV/seq sharding.
+  zero — extra axes for ZeRO-1 optimizer-state sharding (defaults to dp).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    dp: tuple[str, ...] = ()
+    tp: tuple[str, ...] = ()
+    sp: tuple[str, ...] = ()
+    ep: tuple[str, ...] = ()
+    cp: tuple[str, ...] = ()
+    zero: tuple[str, ...] = ()
+
+    def resolve(self, name):
+        """Resolve one logical dim annotation to a PartitionSpec entry."""
+        if name is None:
+            return None
+        if isinstance(name, (tuple, list)):  # combination, e.g. ("dp", "tp")
+            out: list[str] = []
+            for n in name:
+                r = self.resolve(n)
+                if r is None:
+                    continue
+                out.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(out) if out else None
+        axes = getattr(self, name, None)
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def make_rules(
+    *,
+    dp: tuple[str, ...] = (),
+    tp: tuple[str, ...] = (),
+    sequence_parallel: bool = False,
+    context_parallel: tuple[str, ...] = (),
+    zero1: bool = True,
+) -> ShardingRules:
+    return ShardingRules(
+        dp=dp,
+        tp=tp,
+        sp=tp if sequence_parallel else (),
+        ep=tp,
+        cp=context_parallel,
+        zero=dp if zero1 else (),
+    )
+
+
+_CTX: contextvars.ContextVar[tuple[Mesh | None, ShardingRules]] = contextvars.ContextVar(
+    "repro_mesh_ctx", default=(None, ShardingRules())
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: ShardingRules):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.get()[0]
+
+
+def current_rules() -> ShardingRules:
+    return _CTX.get()[1]
+
+
+def logical_spec(*names) -> P:
+    """Build a PartitionSpec from logical dim names under the current rules."""
+    rules = current_rules()
+    return P(*[rules.resolve(n) for n in names])
+
+
+def named_sharding(*names) -> NamedSharding | None:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_spec(*names))
+
+
+def shard(x, *names):
+    """with_sharding_constraint under the active mesh; identity otherwise."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(*names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def axes_size(name: str) -> int:
+    """Total device count behind a logical axis name (1 when no mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    resolved = current_rules().resolve(name)
+    if resolved is None:
+        return 1
+    axes = resolved if isinstance(resolved, tuple) else (resolved,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_sharding(spec: P) -> NamedSharding | None:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec)
+
+
+def sanitize_pspec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't evenly divide.
+
+    Explicit pjit in_shardings require exact divisibility (e.g. a KV cache with
+    2 kv-heads cannot be head-sharded 16-way as an *input*); internal
+    with_sharding_constraint calls are padded by GSPMD and stay as-is.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for i, e in enumerate(entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(e if (shape[i] % size == 0 and shape[i] >= size) else None)
+    return P(*out)
+
+
+def sanitize_spec_tree(spec_tree, shape_tree, mesh: Mesh):
+    """Tree-wise sanitize: specs tree must structurally match the shapes tree."""
+    return jax.tree.map(
+        lambda s, h: sanitize_pspec(s, h.shape, mesh),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

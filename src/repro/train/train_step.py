@@ -1,0 +1,93 @@
+"""Training step factory: loss -> grads -> (optional compression) -> AdamW.
+
+Supports microbatch gradient accumulation (lax.scan over microbatches — the
+PP-less half of the paper's pipeline analysis; the bubble-bearing half lives in
+`repro.core.predict` and `repro.parallel.pipeline`), the paper's three
+activation-recomputation policies via remat (`none`/`selective`/`full`,
+§3.3 eq. 1-2), and int8 gradient compression with error feedback.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.models.transformer import Model
+from repro.parallel.compression import compress_gradients
+from repro.train.optimizer import adamw_update
+
+
+def make_train_step(model: Model, pcfg: ParallelConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", ["grad_error"]}.
+    """
+
+    def _zero1_shard_grads(grads):
+        """ZeRO gradient sharding: constrain fp32 grads onto the data axes so
+        they are reduce-scattered instead of replicated (fp32 grads for a
+        480B-param MoE would otherwise not fit per-device HBM)."""
+        from jax.sharding import NamedSharding
+
+        from repro.parallel.axes import current_mesh
+        from repro.train.optimizer import _zero1_spec
+
+        mesh = current_mesh()
+        if mesh is None:
+            return grads
+        pspecs = model.pspecs()
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, _zero1_spec(s, g.shape))
+            ),
+            grads,
+            pspecs,
+        )
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, remat=pcfg.remat)
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if pcfg.zero1:
+            grads = _zero1_shard_grads(grads)
+        return grads, metrics
+
+    def accumulate(params, batch):
+        n = pcfg.microbatches
+        if n <= 1:
+            return grads_of(params, batch)
+        B = jax.tree.leaves(batch)[0].shape[0]
+        assert B % n == 0, (B, n)
+        micro = jax.tree.map(lambda x: x.reshape(n, B // n, *x.shape[1:]), batch)
+
+        def body(carry, mb):
+            g_acc, m_acc = carry
+            g, m = grads_of(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32) / n, g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b / n, m_acc, m)
+            return (g_acc, m_acc), None
+
+        # seed accumulators with the first microbatch (fixes metric structure)
+        g0, met0 = grads_of(params, jax.tree.map(lambda x: x[0], micro))
+        init = (
+            jax.tree.map(lambda a: a.astype(jnp.float32) / n, g0),
+            jax.tree.map(lambda a: a / n, met0),
+        )
+        (g, m), _ = jax.lax.scan(body, init, jax.tree.map(lambda x: x[1:], micro))
+        return g, m
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        grads, metrics = accumulate(params, batch)
+        if pcfg.grad_compress:
+            grads, new_err = compress_gradients(grads, state.get("grad_error"), pcfg.dp_axes)
+        new_params, new_opt, stats = adamw_update(params, grads, opt, tcfg)
+        metrics = {**metrics, **stats}
+        new_state = {"params": new_params, "opt": new_opt}
+        if pcfg.grad_compress:
+            new_state["grad_error"] = new_err
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests must see exactly 1 device (the dry-run alone uses 512 host devices)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

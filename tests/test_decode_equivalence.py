@@ -1,0 +1,74 @@
+"""The serving invariant: prefill-then-decode must reproduce the full forward
+pass token-for-token, for every architecture family (attention KV caches,
+SWA ring buffers, Mamba2 recurrent state, RWKV6 wkv state, MoE routing)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models.transformer import Model
+
+CASES = [
+    "qwen3_14b",  # GQA + qk_norm
+    "h2o_danube_1p8b",  # SWA ring buffer
+    "rwkv6_7b",  # wkv state
+    "zamba2_1p2b",  # mamba2 + shared attn
+    "musicgen_large",  # MHA
+]
+
+
+def _full_logits(m, params, batch):
+    x, _ = m.forward(params, batch)
+    return np.asarray(m._head(params, x))
+
+
+@pytest.mark.parametrize("arch", CASES)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if arch == "h2o_danube_1p8b":
+        cfg = dataclasses.replace(cfg, sliding_window=16)
+    m = Model(cfg)
+    key = jax.random.PRNGKey(1)
+    B, S, S0 = 2, 48, 32
+    params = m.init(key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    ref = _full_logits(m, params, {"tokens": tokens})
+
+    logits, cache = jax.jit(lambda p, b: m.prefill(p, b, max_len=S))(
+        params, {"tokens": tokens[:, :S0]}
+    )
+    errs = [np.abs(np.asarray(logits) - ref[:, S0 - 1]).max()]
+    dec = jax.jit(lambda p, c, t: m.decode_step(p, c, t))
+    for t in range(S0, S):
+        logits, cache = dec(params, cache, tokens[:, t : t + 1])
+        errs.append(np.abs(np.asarray(logits) - ref[:, t]).max())
+    assert max(errs) < 2e-3, (arch, max(errs))
+
+
+def test_moe_prefill_decode_dropless():
+    """With dropless capacity, MoE decode must match the full pass exactly;
+    with tight capacity they may differ (token-priority dropping is
+    batch-dependent) — both behaviours are asserted."""
+    base = get_config("deepseek_moe_16b").reduced()
+    cfg = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, capacity_factor=float(base.moe.num_experts))
+    )
+    m = Model(cfg)
+    key = jax.random.PRNGKey(1)
+    B, S, S0 = 2, 48, 32
+    params = m.init(key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    ref = _full_logits(m, params, {"tokens": tokens})
+    logits, cache = jax.jit(lambda p, b: m.prefill(p, b, max_len=S))(
+        params, {"tokens": tokens[:, :S0]}
+    )
+    errs = [np.abs(np.asarray(logits) - ref[:, S0 - 1]).max()]
+    dec = jax.jit(lambda p, c, t: m.decode_step(p, c, t))
+    for t in range(S0, S):
+        logits, cache = dec(params, cache, tokens[:, t : t + 1])
+        errs.append(np.abs(np.asarray(logits) - ref[:, t]).max())
+    assert max(errs) < 2e-3, max(errs)
