@@ -12,10 +12,12 @@ def main() -> None:
     from benchmarks.kernels_bench import bench_kernels
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline import bench_roofline
+    from benchmarks.serving_bench import bench_serving
 
     suites = dict(ALL)
     suites["roofline"] = bench_roofline
     suites["kernels"] = bench_kernels
+    suites["serving"] = bench_serving
 
     wanted = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,76 @@
+"""Serving-simulation suite: SLO metrics per scheduler policy, the
+static-vs-continuous domination check, and the single-request consistency
+contract with `inference_latency`. Rows follow the harness convention
+(name, us_per_call, derived)."""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.hardware import H100_SXM
+from repro.core.predict import inference_latency
+from repro.sim import (
+    LengthDist,
+    POLICIES,
+    SchedConfig,
+    ServingCostModel,
+    SimRequest,
+    Workload,
+    dominates,
+    pareto_sweep,
+    simulate,
+    summarize,
+)
+
+
+def bench_serving():
+    cfg = get_config("qwen3_14b")
+    cost = ServingCostModel(cfg, H100_SXM, tp=1, ctx_quantum=16)
+    wl = Workload(
+        name="serving-smoke", qps=12.0, num_requests=64, arrival="poisson",
+        prompt=LengthDist("lognormal", 256, 0.4, lo=16, hi=2048),
+        output=LengthDist("lognormal", 64, 0.4, lo=4, hi=512), seed=0,
+    )
+    reqs = wl.generate()
+    rows = []
+    for policy in POLICIES:
+        s = summarize(
+            simulate(reqs, cost, SchedConfig(policy=policy, slots=8)),
+            slo_ttft=2.0, slo_tpot=0.05,
+        )
+        rows.append((
+            f"serving/{policy}-qps{wl.qps:g}",
+            s["e2e_p50"] * 1e6,
+            f"tok/s={s['tokens_per_s']:.0f}"
+            f";ttft_p95={s['ttft_p95'] * 1e3:.0f}ms"
+            f";tpot_p95={s['tpot_p95'] * 1e3:.1f}ms"
+            f";goodput={s['goodput_frac']:.2f}"
+            f";preempt={s['preemptions']}",
+        ))
+
+    # continuous must dominate static at every matched (slots, KV) point
+    sweep = pareto_sweep(reqs, cost, policies=("static", "continuous"),
+                         slot_counts=(2, 4, 8))
+    by = {(r["policy"], r["slots"]): r for r in sweep}
+    dom = all(dominates(by[("continuous", n)], by[("static", n)]) for n in (2, 4, 8))
+    best = max(sweep, key=lambda r: r["tokens_per_s"])
+    rows.append((
+        "serving/continuous_vs_static",
+        best["e2e_p95"] * 1e6,
+        f"dominates={dom};best={best['policy']}x{best['slots']}"
+        f"@{best['tokens_per_s']:.0f}tok/s",
+    ))
+
+    # single-request sim must reproduce inference_latency's TTFT/TPOT
+    prompt, gen = 512, 64
+    bd = inference_latency(cfg, H100_SXM, tp=1, batch=1, prompt=prompt, gen=gen)
+    exact = ServingCostModel(cfg, H100_SXM, tp=1, ctx_quantum=1)
+    r = simulate([SimRequest(0, 0.0, prompt, gen)], exact,
+                 SchedConfig(policy="continuous", slots=1)).records[0]
+    d_ttft = 100.0 * (r.ttft - bd.ttft) / bd.ttft
+    d_tpot = 100.0 * (r.tpot - bd.tpot) / bd.tpot
+    rows.append((
+        "serving/single_req_consistency",
+        r.ttft * 1e6,
+        f"dTTFT={d_ttft:+.2f}%;dTPOT={d_tpot:+.2f}%",
+    ))
+    return rows

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full pytest suite plus a fast serving-simulation
+# smoke (both sub-minute on CPU). Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.run serving

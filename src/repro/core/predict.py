@@ -25,10 +25,33 @@ from repro.core.roofline import GEMM, op_time, total_time
 @dataclass
 class Breakdown:
     parts: dict = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)  # inference: {"gen", "prompt", "batch"}
 
     @property
     def total(self) -> float:
         return sum(self.parts.values())
+
+    @property
+    def ttft(self) -> float:
+        """Time-to-first-token: the prefill-side terms. This is the SLO
+        definition shared with `repro.sim` and the serving benchmarks
+        (0 for training breakdowns, which have no prefill terms)."""
+        return sum(v for k, v in self.parts.items() if k.startswith("prefill"))
+
+    @property
+    def decode_total(self) -> float:
+        """All per-generated-token terms (decode compute/comm + overhead)."""
+        return sum(
+            v for k, v in self.parts.items()
+            if k.startswith("decode") or k == "overhead"
+        )
+
+    @property
+    def tpot(self) -> float:
+        """Mean time-per-output-token over the decode phase (0 when the
+        breakdown carries no generation metadata, e.g. training)."""
+        gen = self.meta.get("gen", 0)
+        return self.decode_total / gen if gen else 0.0
 
     def as_dict(self) -> dict:
         return {**{k: float(v) for k, v in self.parts.items()}, "total": float(self.total)}
@@ -173,7 +196,8 @@ def inference_latency(cfg: ModelConfig, hw: HardwareSpec, *, tp: int, batch: int
             "decode_compute": t_dec_comp + t_dec_head,
             "decode_comm": t_dec_comm,
             "overhead": t_overhead,
-        }
+        },
+        meta={"gen": gen, "prompt": prompt, "batch": batch},
     )
 
 

@@ -41,6 +41,7 @@ class ServeEngine:
         self.max_len = max_len
         self.slots = slots
         self.key = jax.random.PRNGKey(seed)
+        self.decode_steps = 0  # decode iterations of the last serve() call
 
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
         self._decode = jax.jit(
@@ -76,12 +77,14 @@ class ServeEngine:
 
     # ------------------------------------------------------ slot-based server
     def serve(self, requests: list[Request], *, eos: int | None = None) -> list[Request]:
-        """Continuous-batching-lite scheduler over a fixed slot count."""
+        """Continuous-batching-lite scheduler over a fixed slot count.
+
+        `self.decode_steps` reports the decode iterations of the last call."""
         pending = list(requests)
         active: list[Request | None] = [None] * self.slots
         cache = None
         logits_np = None
-        steps = 0
+        self.decode_steps = 0
         while pending or any(a is not None for a in active):
             # fill free slots: batch-prefill all newly admitted requests
             admit = []
@@ -103,9 +106,13 @@ class ServeEngine:
                 if (eos is not None and tok == eos) or len(r.out_tokens) >= r.max_new_tokens:
                     r.done = True
                     active[s] = None
+            if not any(active[s] is not None for s in live):
+                # every live slot finished this step: the decode would only
+                # produce logits for freed slots (stale by the next admit)
+                continue
             logits, cache = self._decode(self.params, cache, jnp.asarray(nxt)[:, None])
             logits_np = np.array(logits)
-            steps += 1
+            self.decode_steps += 1
         return requests
 
     def _admit(self, slots_to_fill, active, cache, logits_np):

@@ -1,0 +1,112 @@
+"""CLI: simulate serving a model config on a hardware target under load.
+
+    PYTHONPATH=src python -m repro.sim --config qwen3_14b --hw h100 --qps 8
+
+Prints TTFT/TPOT/e2e percentiles, goodput, and tokens/s per scheduler
+policy, then the static-vs-continuous throughput-latency sweep.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+from repro.core.hardware import get_hardware
+from repro.sim import (
+    LengthDist,
+    POLICIES,
+    SchedConfig,
+    ServingCostModel,
+    Workload,
+    pareto_sweep,
+    simulate,
+    summarize,
+)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="python -m repro.sim", description=__doc__)
+    p.add_argument("--config", default="qwen3_14b", help="model config id")
+    p.add_argument("--hw", default="h100", help="hardware target (see core.hardware)")
+    p.add_argument("--tp", type=int, default=1)
+    p.add_argument("--prec", type=int, default=2, help="bytes per weight/act element")
+    p.add_argument("--qps", type=float, default=8.0)
+    p.add_argument("--requests", type=int, default=200)
+    p.add_argument("--arrival", default="poisson", choices=["constant", "poisson", "bursty"])
+    p.add_argument("--prompt-dist", default="lognormal", choices=["fixed", "lognormal"])
+    p.add_argument("--prompt-mean", type=float, default=512)
+    p.add_argument("--prompt-sigma", type=float, default=0.4)
+    p.add_argument("--output-dist", default="lognormal", choices=["fixed", "lognormal"])
+    p.add_argument("--output-mean", type=float, default=128)
+    p.add_argument("--output-sigma", type=float, default=0.4)
+    p.add_argument("--trace", default=None, help="JSONL trace to replay instead")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--policy", default="all", choices=list(POLICIES) + ["all"])
+    p.add_argument("--slots", type=int, default=16)
+    p.add_argument("--token-budget", type=int, default=512)
+    p.add_argument("--kv-gb", type=float, default=None,
+                   help="override KV budget (GB); default: DRAM minus weights")
+    p.add_argument("--slo-ttft", type=float, default=2.0, help="seconds")
+    p.add_argument("--slo-tpot", type=float, default=0.05, help="seconds/token")
+    p.add_argument("--sweep", default="2,4,8,16",
+                   help="comma-separated slot counts for the pareto sweep ('' to skip)")
+    p.add_argument("--ctx-quantum", type=int, default=16)
+    return p
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
+    cfg = get_config(args.config)
+    hw = get_hardware(args.hw)
+    cost = ServingCostModel(cfg, hw, tp=args.tp, prec=args.prec,
+                            ctx_quantum=args.ctx_quantum)
+    wl = Workload(
+        name=args.trace or "synthetic",
+        qps=args.qps,
+        num_requests=args.requests,
+        arrival=args.arrival,
+        prompt=LengthDist(args.prompt_dist, args.prompt_mean, args.prompt_sigma),
+        output=LengthDist(args.output_dist, args.output_mean, args.output_sigma),
+        seed=args.seed,
+        trace_path=args.trace,
+    )
+    reqs = wl.generate()
+    kv_cap = args.kv_gb * 1e9 if args.kv_gb is not None else None
+
+    print(f"# {cfg.name} on {hw.name} tp={args.tp}  |  "
+          f"{len(reqs)} requests, {args.arrival} arrivals @ {args.qps} qps")
+    print(f"# weights {cost.weight_bytes / 1e9:.1f} GB/dev, "
+          f"KV budget {(kv_cap or cost.kv_capacity_bytes) / 1e9:.1f} GB/dev")
+
+    policies = list(POLICIES) if args.policy == "all" else [args.policy]
+    hdr = (f"{'policy':<11} {'ttft p50/p95/p99 (s)':>22} {'tpot p50/p95/p99 (ms)':>22} "
+           f"{'e2e p50/p95/p99 (s)':>21} {'tok/s':>7} {'goodput':>8} {'preempt':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for policy in policies:
+        sc = SchedConfig(policy=policy, slots=args.slots,
+                         token_budget=args.token_budget, kv_capacity=kv_cap)
+        s = summarize(simulate(reqs, cost, sc),
+                      slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
+        print(f"{policy:<11} "
+              f"{s['ttft_p50']:>6.2f}/{s['ttft_p95']:.2f}/{s['ttft_p99']:.2f}  "
+              f"{s['tpot_p50'] * 1e3:>6.1f}/{s['tpot_p95'] * 1e3:.1f}/{s['tpot_p99'] * 1e3:.1f}  "
+              f"{s['e2e_p50']:>6.2f}/{s['e2e_p95']:.2f}/{s['e2e_p99']:.2f}  "
+              f"{s['tokens_per_s']:>7.0f} {s['goodput_frac']:>7.0%} {s['preemptions']:>7}")
+
+    if args.sweep:
+        slot_counts = [int(x) for x in args.sweep.split(",") if x]
+        rows = pareto_sweep(reqs, cost, policies=("static", "continuous"),
+                            slot_counts=slot_counts,
+                            base=SchedConfig(token_budget=args.token_budget,
+                                             kv_capacity=kv_cap),
+                            slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
+        print(f"\n# throughput-latency sweep (equal KV budget)")
+        print(f"{'policy':<11} {'slots':>5} {'tok/s':>8} {'e2e_p95 (s)':>12} {'pareto':>7}")
+        for r in rows:
+            print(f"{r['policy']:<11} {r['slots']:>5} {r['tokens_per_s']:>8.0f} "
+                  f"{r['e2e_p95']:>12.2f} {'*' if r['pareto'] else '':>7}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""SLO metrics and throughput-latency sweeps for simulated serving runs.
+
+One metric vocabulary shared with `Breakdown.ttft`/`.tpot` in
+`repro.core.predict`: TTFT is the prefill-side wait to the first emitted
+token, TPOT the mean inter-token gap after it. Goodput counts only the
+requests that met every configured SLO (the inference-perf convention),
+normalized by makespan.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from repro.sim.scheduler import SchedConfig, SimResult, simulate
+
+PCTS = (50, 95, 99)
+
+
+def summarize(res: SimResult, *, slo_ttft: float | None = None,
+              slo_tpot: float | None = None) -> dict:
+    """Aggregate a SimResult into the SLO metric dict the CLI/benchmarks print."""
+    recs = res.records
+    ttft = np.array([r.ttft for r in recs])
+    e2e = np.array([r.e2e for r in recs])
+    tpot = np.array([r.tpot for r in recs if r.output > 1])
+    out: dict = {
+        "policy": res.policy,
+        "requests": len(recs),
+        "iterations": res.iterations,
+        "decode_steps": res.decode_steps,
+        "preemptions": res.preemptions,
+        "peak_kv_gb": res.peak_kv / 1e9,
+        "kv_capacity_gb": res.kv_capacity / 1e9,
+        "makespan_s": res.makespan,
+    }
+    for name, xs in (("ttft", ttft), ("tpot", tpot), ("e2e", e2e)):
+        for p in PCTS:
+            out[f"{name}_p{p}"] = float(np.percentile(xs, p)) if len(xs) else 0.0
+        out[f"{name}_mean"] = float(xs.mean()) if len(xs) else 0.0
+    total_tokens = sum(r.output for r in recs)
+    span = max(res.makespan, 1e-12)
+    out["tokens_per_s"] = total_tokens / span
+    out["requests_per_s"] = len(recs) / span
+    ok = np.ones(len(recs), bool)
+    if slo_ttft is not None:
+        ok &= ttft <= slo_ttft
+    if slo_tpot is not None:
+        tpot_all = np.array([r.tpot for r in recs])
+        ok &= tpot_all <= slo_tpot
+    out["goodput_frac"] = float(ok.mean()) if len(recs) else 0.0
+    out["goodput_rps"] = float(ok.sum()) / span
+    return out
+
+
+def pareto_sweep(requests, cost, *, policies=("static", "continuous"),
+                 slot_counts=(1, 2, 4, 8, 16), base: SchedConfig | None = None,
+                 slo_ttft: float | None = None,
+                 slo_tpot: float | None = None) -> list[dict]:
+    """Throughput-latency frontier: simulate each (policy, slots) point on the
+    SAME request trace and KV budget; rows carry tokens/s vs p95 e2e plus a
+    `pareto` flag (non-dominated within the sweep)."""
+    base = base or SchedConfig()
+    rows = []
+    for policy in policies:
+        for slots in slot_counts:
+            sc = replace(base, policy=policy, slots=slots)
+            s = summarize(simulate(requests, cost, sc),
+                          slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+            s["slots"] = slots
+            rows.append(s)
+    for row in rows:
+        row["pareto"] = not any(dominates(o, row) for o in rows)
+    return rows
+
+
+def dominates(a: dict, b: dict) -> bool:
+    """True when summary `a` beats `b` on the throughput-latency plane."""
+    return (
+        a["tokens_per_s"] >= b["tokens_per_s"]
+        and a["e2e_p95"] <= b["e2e_p95"]
+        and (a["tokens_per_s"] > b["tokens_per_s"] or a["e2e_p95"] < b["e2e_p95"])
+    )

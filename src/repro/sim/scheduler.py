@@ -1,0 +1,321 @@
+"""Discrete-event serving scheduler over analytical step costs.
+
+The simulator advances in engine iterations (the unit real continuous-
+batching servers schedule at), pricing each iteration with
+`ServingCostModel` instead of a wall clock. Three policies:
+
+  * static     — classic static batching: wait for the engine to go idle,
+                 admit up to `slots` queued requests, pad prompts to the
+                 batch max, decode until the LONGEST request finishes.
+  * continuous — slot-based continuous batching (Orca-style): free slots
+                 are refilled FCFS every iteration; admitted prompts are
+                 prefilled whole, finished requests free their slot (and
+                 KV) immediately.
+  * chunked    — continuous + chunked prefill under a per-iteration token
+                 budget: each iteration spends one budget token per live
+                 decoder and the remainder on head-of-line prefill chunks,
+                 bounding inter-token stalls behind long prompts.
+
+KV accounting follows §3.5: per-sequence cache bytes at the current
+processed context, checked every iteration against the model's KV budget.
+When projected growth exceeds capacity the youngest-admitted request is
+preempted (KV dropped, request returned to the head of the queue) and
+later resumed by re-prefilling prompt + already-emitted tokens — the
+recompute-style preemption vLLM uses. The capacity invariant (`peak_kv <=
+kv_capacity`) is enforced, not just sampled.
+
+Token semantics mirror `ServeEngine`: completing a prefill yields the
+first output token directly from the prefill logits; each decode step
+processes the last emitted token and yields the next, so a request with
+`output` tokens costs one prefill + `output - 1` decode steps.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+from repro.sim.costmodel import ServingCostModel
+from repro.sim.workload import SimRequest
+
+POLICIES = ("static", "continuous", "chunked")
+
+_MAX_ITERATIONS = 5_000_000  # runaway guard
+
+
+@dataclass(frozen=True)
+class SchedConfig:
+    policy: str = "continuous"
+    slots: int = 16  # max concurrent sequences (static: batch size)
+    token_budget: int = 512  # chunked: tokens processed per iteration
+    kv_capacity: float | None = None  # bytes; None -> cost.kv_capacity_bytes
+
+
+@dataclass
+class ReqRecord:
+    rid: int
+    arrival: float
+    prompt: int
+    output: int
+    admitted: float = -1.0
+    first_token: float = -1.0
+    finish: float = -1.0
+    preemptions: int = 0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean inter-token time after the first (0 for single-token outputs)."""
+        if self.output <= 1:
+            return 0.0
+        return (self.finish - self.first_token) / (self.output - 1)
+
+    @property
+    def e2e(self) -> float:
+        return self.finish - self.arrival
+
+
+@dataclass
+class SimResult:
+    policy: str
+    records: list[ReqRecord]
+    admit_order: list[int]  # rids in first-admission order (FCFS witness)
+    iterations: int = 0
+    decode_steps: int = 0
+    preemptions: int = 0
+    peak_kv: float = 0.0
+    kv_capacity: float = 0.0
+
+    @property
+    def makespan(self) -> float:
+        if not self.records:
+            return 0.0
+        return max(r.finish for r in self.records) - min(r.arrival for r in self.records)
+
+
+@dataclass
+class _Run:
+    """Live request state. `cached` = context tokens materialized in KV;
+    deficit = prompt + generated - cached (1 while decoding normally)."""
+
+    req: SimRequest
+    rec: ReqRecord
+    cached: int = 0
+    generated: int = 0
+    admit_seq: int = -1
+
+    @property
+    def prefill_target(self) -> int:
+        """Context tokens the KV must hold before the next logits: the
+        prompt plus every already-emitted token (re-built after preemption)."""
+        return self.req.prompt + self.generated
+
+    @property
+    def deficit(self) -> int:
+        return self.prefill_target - self.cached
+
+    @property
+    def needs_prefill(self) -> bool:
+        return self.cached < self.req.prompt if self.generated == 0 else self.deficit > 1
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.req.output
+
+
+def simulate(requests: list[SimRequest], cost: ServingCostModel,
+             sc: SchedConfig | None = None) -> SimResult:
+    sc = sc or SchedConfig()
+    if sc.policy not in POLICIES:
+        raise ValueError(f"unknown policy {sc.policy!r}; choose from {POLICIES}")
+    if sc.slots < 1:
+        raise ValueError("slots must be >= 1")
+    if sc.policy == "chunked" and sc.token_budget < sc.slots:
+        raise ValueError(
+            "chunked prefill needs token_budget >= slots "
+            "(each live slot consumes one decode token per iteration)")
+    cap = sc.kv_capacity if sc.kv_capacity is not None else cost.kv_capacity_bytes
+    if len({r.rid for r in requests}) != len(requests):
+        raise ValueError("request rids must be unique")
+    for r in requests:
+        if r.prompt < 1 or r.output < 1:
+            raise ValueError(
+                f"request {r.rid} has prompt={r.prompt}, output={r.output}; "
+                "both must be >= 1")
+        need = cost.kv_bytes(r.prompt + r.output)
+        if need > cap:
+            raise ValueError(
+                f"request {r.rid} needs {need / 1e9:.2f} GB KV at full context "
+                f"but the budget is {cap / 1e9:.2f} GB — it can never be served")
+    ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    if sc.policy == "static":
+        return _run_static(ordered, cost, sc, cap)
+    return _run_continuous(ordered, cost, sc, cap, chunked=sc.policy == "chunked")
+
+
+# ----------------------------------------------------------- static batching
+def _run_static(ordered: list[SimRequest], cost: ServingCostModel,
+                sc: SchedConfig, cap: float) -> SimResult:
+    res = SimResult(sc.policy, [], [], kv_capacity=cap)
+    recs = {r.rid: ReqRecord(r.rid, r.arrival, r.prompt, r.output) for r in ordered}
+    res.records = [recs[r.rid] for r in ordered]
+    pending = deque(ordered)
+    t = 0.0
+    while pending:
+        if pending[0].arrival > t:
+            t = pending[0].arrival
+        # form a batch: FCFS up to `slots`, padded-KV projection must fit
+        batch: list[SimRequest] = []
+        while pending and pending[0].arrival <= t and len(batch) < sc.slots:
+            cand = pending[0]
+            trial = batch + [cand]
+            s_pad = max(r.prompt for r in trial)
+            out_max = max(r.output for r in trial)
+            if len(trial) * cost.kv_bytes(s_pad + out_max) > cap and batch:
+                break  # head-of-line blocks until the current batch drains
+            batch.append(pending.popleft())
+        B = len(batch)
+        s_pad = max(r.prompt for r in batch)
+        t_admit = t
+        t += cost.prefill_time(s_pad, ctx_end=s_pad, batch=B)
+        res.iterations += 1
+        res.peak_kv = max(res.peak_kv, B * cost.kv_bytes(s_pad))
+        gen = {}
+        for r in batch:
+            rec = recs[r.rid]
+            rec.admitted = t_admit
+            rec.first_token = t
+            res.admit_order.append(r.rid)
+            gen[r.rid] = 1
+            if r.output <= 1:
+                rec.finish = t
+        # decode with the full padded batch until the longest request is done
+        k = 0
+        while any(gen[r.rid] < r.output for r in batch):
+            k += 1
+            t += cost.decode_step_time(B, s_pad + k)
+            res.iterations += 1
+            res.decode_steps += 1
+            kv_now = sum(
+                cost.kv_bytes(s_pad + min(k, r.output - 1)) for r in batch)
+            res.peak_kv = max(res.peak_kv, kv_now)
+            for r in batch:
+                if gen[r.rid] < r.output:
+                    gen[r.rid] += 1
+                    if gen[r.rid] >= r.output:
+                        recs[r.rid].finish = t
+            if res.iterations > _MAX_ITERATIONS:
+                raise RuntimeError("static simulation did not converge")
+    return res
+
+
+# ------------------------------------------------- continuous / chunked-prefill
+def _run_continuous(ordered: list[SimRequest], cost: ServingCostModel,
+                    sc: SchedConfig, cap: float, *, chunked: bool) -> SimResult:
+    res = SimResult(sc.policy, [], [], kv_capacity=cap)
+    recs = {r.rid: ReqRecord(r.rid, r.arrival, r.prompt, r.output) for r in ordered}
+    res.records = [recs[r.rid] for r in ordered]
+    pending: deque[_Run] = deque(_Run(r, recs[r.rid]) for r in ordered)
+    running: list[_Run] = []
+    t = 0.0
+    admit_seq = 0
+
+    while pending or running:
+        if not running and pending and pending[0].req.arrival > t:
+            t = pending[0].req.arrival
+        # ---- FCFS admission into free slots (optimistic KV check) ----
+        kv_now = sum(cost.kv_bytes(r.cached) for r in running)
+        while pending and pending[0].req.arrival <= t and len(running) < sc.slots:
+            cand = pending[0]
+            need = cost.kv_bytes(cand.req.prompt + cand.generated + 1)
+            if kv_now + need > cap:
+                break  # FCFS: later arrivals must not jump the queue
+            pending.popleft()
+            if cand.rec.admitted < 0:
+                cand.rec.admitted = t
+                res.admit_order.append(cand.req.rid)
+            cand.admit_seq = admit_seq
+            admit_seq += 1
+            running.append(cand)
+            kv_now += need  # reserve the projected bytes, not the current 0
+
+        # ---- plan this iteration's work ----
+        decoders = [r for r in running if not r.needs_prefill and r.generated >= 1]
+        prefills: list[tuple[_Run, int]] = []  # (run, tokens this iteration)
+        if chunked:
+            budget = sc.token_budget - len(decoders)
+            for r in sorted((x for x in running if x.needs_prefill),
+                            key=lambda x: x.admit_seq):
+                if budget <= 0:
+                    break
+                take = min(budget, r.prefill_target - r.cached)
+                prefills.append((r, take))
+                budget -= take
+        else:
+            for r in running:
+                if r.needs_prefill:
+                    prefills.append((r, r.prefill_target - r.cached))
+
+        # ---- enforce the KV-capacity invariant by preempting youngest ----
+        planned = {id(r): r.cached for r in running}
+        for r in decoders:
+            planned[id(r)] += 1
+        for r, take in prefills:
+            planned[id(r)] += take
+        projected = sum(cost.kv_bytes(c) for c in planned.values())
+        while projected > cap and len(running) > 1:
+            victim = max(running, key=lambda r: r.admit_seq)
+            running.remove(victim)
+            if victim in decoders:
+                decoders.remove(victim)
+            prefills = [(r, n) for r, n in prefills if r is not victim]
+            del planned[id(victim)]
+            victim.cached = 0
+            victim.rec.preemptions += 1
+            res.preemptions += 1
+            pending.appendleft(victim)
+            projected = sum(cost.kv_bytes(c) for c in planned.values())
+        res.peak_kv = max(res.peak_kv, projected)
+
+        # ---- price the iteration ----
+        t_iter = 0.0
+        if prefills and not chunked:
+            # whole-prompt prefills admitted together run as ONE padded batch
+            # (what ServeEngine._admit and the static path do); non-chunked
+            # prefills always start from cached == 0
+            s_pad = max(take for _, take in prefills)
+            t_iter += cost.prefill_time(s_pad, ctx_end=s_pad, batch=len(prefills))
+        else:
+            for r, take in prefills:
+                # only the chunk completing the prompt produces sampled logits
+                t_iter += cost.prefill_time(
+                    take, ctx_end=r.cached + take,
+                    with_head=r.cached + take == r.prefill_target)
+        if decoders:
+            ctx_mean = sum(r.cached + 1 for r in decoders) / len(decoders)
+            t_iter += cost.decode_step_time(len(decoders), ctx_mean)
+            res.decode_steps += 1
+        if t_iter == 0.0 and not pending and not running:
+            break
+        t += t_iter
+        res.iterations += 1
+
+        # ---- apply state transitions at iteration end ----
+        for r in decoders:
+            r.cached += 1
+        for r, take in prefills:
+            r.cached += take
+        for r in list(running):
+            if r.deficit == 0 and not r.done:  # logits available -> emit token
+                r.generated += 1
+                if r.rec.first_token < 0:
+                    r.rec.first_token = t
+                if r.done:
+                    r.rec.finish = t
+                    running.remove(r)
+        if res.iterations > _MAX_ITERATIONS:
+            raise RuntimeError("simulation did not converge (check token_budget/kv)")
+    return res

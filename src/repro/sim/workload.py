@@ -1,0 +1,138 @@
+"""Seeded workload generation for the serving simulator.
+
+A `Workload` is a declarative spec — arrival process (constant, Poisson,
+bursty hyperexponential), prompt/output length distributions (fixed,
+lognormal), or a JSONL trace replay — that `generate()` expands into a
+deterministic list of `SimRequest`s. The same spec drives both the
+analytical simulator (`repro.sim.scheduler`) and the real `ServeEngine`
+(via `to_engine_requests`), so simulated and executed schedules are
+comparable request-for-request.
+
+Trace JSONL rows: {"arrival": s, "prompt": n, "output": m} — the aliases
+"arrival_s", "prompt_tokens"/"input_tokens", "output_tokens" are accepted
+(the inference-perf trace convention). Rows without "arrival" get arrivals
+from the configured arrival process.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SimRequest:
+    rid: int
+    arrival: float  # seconds from workload start
+    prompt: int  # prompt tokens
+    output: int  # tokens to generate (>= 1)
+
+
+@dataclass(frozen=True)
+class LengthDist:
+    kind: str = "fixed"  # fixed | lognormal
+    mean: float = 512.0
+    sigma: float = 0.5  # lognormal shape (log-space std)
+    lo: int = 1
+    hi: int = 131072
+
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        if self.kind == "fixed":
+            vals = np.full(n, self.mean)
+        elif self.kind == "lognormal":
+            # parameterized so E[X] == mean
+            mu = np.log(max(self.mean, 1.0)) - 0.5 * self.sigma**2
+            vals = rng.lognormal(mu, self.sigma, size=n)
+        else:
+            raise ValueError(f"unknown length dist {self.kind!r}")
+        return np.clip(np.rint(vals), self.lo, self.hi).astype(np.int64)
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str = "synthetic"
+    qps: float = 8.0
+    num_requests: int = 128
+    arrival: str = "poisson"  # constant | poisson | bursty
+    prompt: LengthDist = field(default_factory=lambda: LengthDist("lognormal", 512.0))
+    output: LengthDist = field(default_factory=lambda: LengthDist("fixed", 128.0))
+    seed: int = 0
+    # bursty = hyperexponential: `burst_fraction` of gaps drawn at
+    # `burst_factor`x the base rate, the rest stretched to keep mean qps
+    burst_factor: float = 8.0
+    burst_fraction: float = 0.2
+    trace_path: str | None = None
+
+    # ------------------------------------------------------------- generation
+    def generate(self) -> list[SimRequest]:
+        if self.trace_path is not None:
+            return self._replay_trace()
+        rng = np.random.default_rng(self.seed)
+        gaps = self._gaps(rng, self.num_requests)
+        arrivals = np.cumsum(gaps)
+        prompts = self.prompt.sample(rng, self.num_requests)
+        outputs = self.output.sample(rng, self.num_requests)
+        return [
+            SimRequest(i, float(arrivals[i]), int(prompts[i]), max(int(outputs[i]), 1))
+            for i in range(self.num_requests)
+        ]
+
+    def _gaps(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        if self.qps <= 0:
+            raise ValueError("qps must be positive")
+        mean_gap = 1.0 / self.qps
+        if self.arrival == "constant":
+            return np.full(n, mean_gap)
+        if self.arrival == "poisson":
+            return rng.exponential(mean_gap, size=n)
+        if self.arrival == "bursty":
+            bf = min(max(self.burst_fraction, 0.0), 0.95)
+            m_burst = mean_gap / self.burst_factor
+            m_off = (mean_gap - bf * m_burst) / (1.0 - bf)
+            in_burst = rng.random(n) < bf
+            gaps = rng.exponential(m_off, size=n)
+            gaps[in_burst] = rng.exponential(m_burst, size=int(in_burst.sum()))
+            return gaps
+        raise ValueError(f"unknown arrival process {self.arrival!r}")
+
+    def _replay_trace(self) -> list[SimRequest]:
+        rows = []
+        with open(self.trace_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    rows.append(json.loads(line))
+        rng = np.random.default_rng(self.seed)
+        gaps = self._gaps(rng, len(rows))
+        synth_arrivals = np.cumsum(gaps)
+        reqs = []
+        for i, row in enumerate(rows):
+            arrival = row.get("arrival", row.get("arrival_s"))
+            if arrival is None:
+                arrival = float(synth_arrivals[i])
+            prompt = row.get("prompt", row.get("prompt_tokens", row.get("input_tokens")))
+            output = row.get("output", row.get("output_tokens"))
+            if prompt is None or output is None:
+                raise ValueError(f"trace row {i} missing prompt/output tokens: {row}")
+            reqs.append(SimRequest(i, float(arrival), max(int(prompt), 1),
+                                   max(int(output), 1)))
+        reqs.sort(key=lambda r: (r.arrival, r.rid))
+        return reqs
+
+
+def to_engine_requests(reqs: list[SimRequest], vocab_size: int, *, seed: int = 0):
+    """Materialize `SimRequest`s as `repro.serve.engine.Request`s (random
+    token ids of the spec'd lengths) so the real engine runs the same
+    schedule the simulator priced. Imports jax-side code lazily."""
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            prompt=rng.integers(0, vocab_size, size=r.prompt).astype(np.int32),
+            max_new_tokens=r.output,
+        )
+        for r in reqs
+    ]

@@ -1,0 +1,38 @@
+"""Hypothesis if available; otherwise stand-ins that register each property
+test as SKIPPED (visible in the pytest summary) instead of silently dropping
+it, while the rest of the module keeps running. Usage:
+
+    from hypkit import given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub(*a, **k):
+                pass
+
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _AnyStrategy:
+        """st.integers(...), st.floats(...), ... -> inert placeholders."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -4,7 +4,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypkit import given, settings, st
 
 from repro.configs import get_config
 from repro.core import comm as C

@@ -5,7 +5,7 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypkit import given, settings, st
 
 import jax
 import jax.numpy as jnp
