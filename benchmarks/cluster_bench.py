@@ -1,0 +1,88 @@
+"""Cluster-simulation suite: colocated vs disaggregated at matched QPS,
+router policy comparison, a heterogeneous A100+H100 fleet, and the
+single-replica parity contract with `repro.sim.simulate`. Rows follow the
+harness convention (name, us_per_call, derived)."""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.hardware import H100_SXM
+from repro.sim import LengthDist, SchedConfig, ServingCostModel, Workload, simulate
+from repro.cluster import (
+    ClusterSpec,
+    ReplicaSpec,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+SLO = dict(slo_ttft=2.0, slo_tpot=0.05)
+
+
+def _spec(pools, hw="h100", slots=8, ctx_quantum=32):
+    return ClusterSpec(replicas=tuple(
+        ReplicaSpec(hw=hw if isinstance(hw, str) else hw[i % len(hw)],
+                    pool=p, sched=SchedConfig(slots=slots),
+                    ctx_quantum=ctx_quantum)
+        for i, p in enumerate(pools)))
+
+
+def bench_cluster():
+    cfg = get_config("qwen3_14b")
+    wl = Workload(
+        name="cluster-smoke", qps=24.0, num_requests=48, arrival="poisson",
+        prompt=LengthDist("lognormal", 256, 0.4, lo=16, hi=2048),
+        output=LengthDist("lognormal", 64, 0.4, lo=4, hi=512), seed=0,
+    )
+    reqs = wl.generate()
+    cache: dict = {}
+    rows = []
+
+    # colocated vs disaggregated, same fleet size, same stream
+    for label, pools in (("colocated-4r", ["mixed"] * 4),
+                         ("disagg-2p2d", ["prefill"] * 2 + ["decode"] * 2)):
+        s = summarize_cluster(
+            simulate_cluster(reqs, cfg, _spec(pools), _cost_cache=cache), **SLO)
+        rows.append((
+            f"cluster/{label}-qps{wl.qps:g}",
+            s["e2e_p50"] * 1e6,
+            f"tok/s={s['tokens_per_s']:.0f}"
+            f";ttft_p95={s['ttft_p95'] * 1e3:.0f}ms"
+            f";tpot_p95={s['tpot_p95'] * 1e3:.1f}ms"
+            f";goodput={s['goodput_frac']:.2f}"
+            f";xfer_share={s['xfer_share']:.4f}",
+        ))
+
+    # router policy comparison on the colocated fleet
+    for router in ("round_robin", "jsq"):
+        spec = ClusterSpec(replicas=_spec(["mixed"] * 4).replicas, router=router)
+        s = summarize_cluster(simulate_cluster(reqs, cfg, spec,
+                                               _cost_cache=cache), **SLO)
+        rows.append((
+            f"cluster/router-{router}",
+            s["ttft_p95"] * 1e6,
+            f"ttft_p95={s['ttft_p95'] * 1e3:.0f}ms;goodput={s['goodput_frac']:.2f}",
+        ))
+
+    # heterogeneous fleet: A100 + H100 colocated pair
+    s = summarize_cluster(
+        simulate_cluster(reqs, cfg, _spec(["mixed"] * 2, hw=("a100", "h100")),
+                         _cost_cache=cache), **SLO)
+    rows.append((
+        "cluster/hetero-a100+h100",
+        s["e2e_p50"] * 1e6,
+        f"tok/s={s['tokens_per_s']:.0f};goodput={s['goodput_frac']:.2f}",
+    ))
+
+    # single-replica cluster must equal repro.sim.simulate exactly
+    cost = ServingCostModel(cfg, H100_SXM, ctx_quantum=32)
+    direct = simulate(reqs, cost, SchedConfig(slots=8))
+    cres = simulate_cluster(reqs, cfg, _spec(["mixed"]))
+    exact = all(
+        a.first_token == b.first_token and a.finish == b.finish
+        for a, b in zip(direct.records, sorted(cres.records, key=lambda r: r.rid)))
+    rows.append((
+        "cluster/single_replica_parity",
+        direct.makespan * 1e6,
+        f"exact={exact}",
+    ))
+    return rows

@@ -9,6 +9,7 @@ import time
 
 
 def main() -> None:
+    from benchmarks.cluster_bench import bench_cluster
     from benchmarks.kernels_bench import bench_kernels
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline import bench_roofline
@@ -18,6 +19,7 @@ def main() -> None:
     suites["roofline"] = bench_roofline
     suites["kernels"] = bench_kernels
     suites["serving"] = bench_serving
+    suites["cluster"] = bench_cluster
 
     wanted = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

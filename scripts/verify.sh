@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full pytest suite plus a fast serving-simulation
-# smoke (both sub-minute on CPU). Run from anywhere.
+# Tier-1 verification: the full pytest suite plus fast serving/cluster
+# simulation smokes (sub-minute on CPU after the test suite). Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
-python -m benchmarks.run serving
+python -m benchmarks.run serving cluster
+
+# CLI smokes: tiny workloads, both entry points must run end-to-end
+python -m repro.sim --config qwen3_14b --hw h100 --qps 16 --requests 12 \
+    --slots 4 --sweep '' --ctx-quantum 32
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 16 \
+    --requests 12 --slots 4 --ctx-quantum 32

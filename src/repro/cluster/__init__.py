@@ -1,0 +1,62 @@
+"""repro.cluster — multi-replica serving cluster simulator.
+
+The layer above `repro.sim`: where one `ReplicaSim` prices a single device
+group's engine iterations, this package co-simulates N of them under a
+shared arrival stream and answers the questions production serving is
+actually planned against:
+
+  * `router`  — pluggable dispatch policies (round-robin, join-shortest-
+    queue, least-KV-load, and session/prefix affinity with a modeled
+    prefill-cache hit discount).
+  * `cluster` — colocated (data-parallel `mixed` replicas) vs
+    disaggregated (`prefill` pools handing KV to `decode` pools over a
+    `comm.p2p`-priced transfer sized by §3.5's cache formula), with
+    heterogeneous per-replica hardware and scheduler configs.
+  * `planner` — SLO-driven capacity planning: sweep replica count / pool
+    split at a target QPS, price candidates in $/hr, return the cheapest
+    plan whose SLO attainment clears the bar.
+
+CLI:
+
+    PYTHONPATH=src python -m repro.cluster --config qwen3_14b --hw h100 \\
+        --replicas 4 --qps 32
+
+prints cluster- and pool-level TTFT/TPOT/goodput for the colocated and
+disaggregated organizations of the same fleet; `--plan` runs the capacity
+sweep instead. `python -m benchmarks.run cluster` emits CSV rows.
+"""
+
+from repro.cluster.cluster import (
+    POOLS,
+    ClusterResult,
+    ClusterSpec,
+    ReplicaSpec,
+    pool_summaries,
+    simulate_cluster,
+    summarize_cluster,
+)
+from repro.cluster.planner import (
+    DEFAULT_PRICE_PER_DEV_HR,
+    cluster_price_per_hr,
+    plan_capacity,
+    replica_price_per_hr,
+)
+from repro.cluster.router import ROUTERS, ReplicaView, Router, make_router
+
+__all__ = [
+    "ClusterResult",
+    "ClusterSpec",
+    "DEFAULT_PRICE_PER_DEV_HR",
+    "POOLS",
+    "ROUTERS",
+    "ReplicaSpec",
+    "ReplicaView",
+    "Router",
+    "cluster_price_per_hr",
+    "make_router",
+    "plan_capacity",
+    "pool_summaries",
+    "replica_price_per_hr",
+    "simulate_cluster",
+    "summarize_cluster",
+]

@@ -1,0 +1,214 @@
+"""CLI: simulate a multi-replica serving cluster under load.
+
+    PYTHONPATH=src python -m repro.cluster --config qwen3_14b --hw h100 \\
+        --replicas 4 --qps 32
+
+Runs the same fleet as a colocated (data-parallel) cluster and as a
+disaggregated prefill/decode cluster, printing cluster- and pool-level
+TTFT/TPOT/goodput/SLO-attainment plus the KV-transfer overhead of the
+disaggregated organization. `--hw` accepts a comma-separated list cycled
+across replicas for heterogeneous fleets; `--plan` runs the SLO-driven
+capacity sweep instead of a fixed-size comparison.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+from repro.sim import ADMISSIONS, LengthDist, SchedConfig, Workload
+from repro.cluster import (
+    ROUTERS,
+    ClusterSpec,
+    ReplicaSpec,
+    cluster_price_per_hr,
+    plan_capacity,
+    pool_summaries,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="python -m repro.cluster", description=__doc__)
+    p.add_argument("--config", default="qwen3_14b", help="model config id")
+    p.add_argument("--hw", default="h100",
+                   help="hardware target(s); comma-separated list cycles "
+                        "across replicas for heterogeneous fleets")
+    p.add_argument("--tp", type=int, default=1)
+    p.add_argument("--prec", type=int, default=2)
+    p.add_argument("--replicas", type=int, default=4)
+    p.add_argument("--prefill-replicas", type=int, default=None,
+                   help="disaggregated pool split (default: replicas // 2)")
+    p.add_argument("--mode", default="both",
+                   choices=["both", "colocated", "disaggregated"])
+    p.add_argument("--router", default="jsq", choices=list(ROUTERS))
+    p.add_argument("--decode-router", default="least_kv", choices=list(ROUTERS))
+    p.add_argument("--hit-frac", type=float, default=0.5,
+                   help="affinity router's prefix-cache discount")
+    p.add_argument("--policy", default="continuous",
+                   choices=["static", "continuous", "chunked"])
+    p.add_argument("--slots", type=int, default=16)
+    p.add_argument("--token-budget", type=int, default=512)
+    p.add_argument("--admission", default="fcfs", choices=list(ADMISSIONS))
+    p.add_argument("--block-tokens", type=int, default=0,
+                   help="paged-KV page size in tokens (0 = contiguous)")
+    p.add_argument("--qps", type=float, default=32.0)
+    p.add_argument("--requests", type=int, default=200)
+    p.add_argument("--arrival", default="poisson",
+                   choices=["constant", "poisson", "bursty"])
+    p.add_argument("--prompt-dist", default="lognormal", choices=["fixed", "lognormal"])
+    p.add_argument("--prompt-mean", type=float, default=512)
+    p.add_argument("--prompt-sigma", type=float, default=0.4)
+    p.add_argument("--output-dist", default="lognormal", choices=["fixed", "lognormal"])
+    p.add_argument("--output-mean", type=float, default=128)
+    p.add_argument("--output-sigma", type=float, default=0.4)
+    p.add_argument("--sessions", type=int, default=0,
+                   help="session count for affinity routing (0 = none)")
+    p.add_argument("--trace", default=None, help="JSONL trace to replay instead")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--slo-ttft", type=float, default=2.0, help="seconds")
+    p.add_argument("--slo-tpot", type=float, default=0.05, help="seconds/token")
+    p.add_argument("--ctx-quantum", type=int, default=16)
+    p.add_argument("--plan", action="store_true",
+                   help="run the SLO-driven capacity sweep instead")
+    p.add_argument("--plan-max-replicas", type=int, default=6)
+    p.add_argument("--attainment", type=float, default=0.95)
+    return p
+
+
+def _replicas(args, n: int, pools: list[str]) -> tuple[ReplicaSpec, ...]:
+    hws = [h.strip() for h in args.hw.split(",") if h.strip()]
+    sched = SchedConfig(policy=args.policy, slots=args.slots,
+                        token_budget=args.token_budget,
+                        admission=args.admission, slo_ttft=args.slo_ttft)
+    return tuple(
+        ReplicaSpec(hw=hws[i % len(hws)], tp=args.tp, prec=args.prec,
+                    pool=pools[i], sched=sched, ctx_quantum=args.ctx_quantum,
+                    kv_block_tokens=args.block_tokens)
+        for i in range(n))
+
+
+def _fmt_row(label: str, s: dict, extra: str = "") -> str:
+    return (f"{label:<14} "
+            f"{s['ttft_p50']:>6.2f}/{s['ttft_p95']:.2f}  "
+            f"{s['tpot_p50'] * 1e3:>6.1f}/{s['tpot_p95'] * 1e3:.1f}  "
+            f"{s['e2e_p95']:>7.2f}  {s['tokens_per_s']:>7.0f} "
+            f"{s['goodput_frac']:>7.0%}{extra}")
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
+    cfg = get_config(args.config)
+    wl = Workload(
+        name=args.trace or "synthetic", qps=args.qps, num_requests=args.requests,
+        arrival=args.arrival,
+        prompt=LengthDist(args.prompt_dist, args.prompt_mean, args.prompt_sigma),
+        output=LengthDist(args.output_dist, args.output_mean, args.output_sigma),
+        seed=args.seed, trace_path=args.trace, num_sessions=args.sessions)
+    reqs = wl.generate()
+
+    if args.plan:
+        hws = [h.strip() for h in args.hw.split(",") if h.strip()]
+        if len(hws) > 1:
+            print(f"# note: --plan sweeps homogeneous fleets; using {hws[0]!r} "
+                  f"(ignoring {', '.join(hws[1:])})")
+        sched = SchedConfig(policy=args.policy, slots=args.slots,
+                            token_budget=args.token_budget,
+                            admission=args.admission, slo_ttft=args.slo_ttft)
+        plan = plan_capacity(
+            cfg, wl, qps=args.qps, slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
+            attainment=args.attainment, hw=hws[0], tp=args.tp,
+            prec=args.prec, sched=sched, router=args.router,
+            decode_router=args.decode_router, hit_frac=args.hit_frac,
+            kv_block_tokens=args.block_tokens, ctx_quantum=args.ctx_quantum,
+            max_replicas=args.plan_max_replicas)
+        print(f"# capacity plan: {cfg.name} @ {args.qps:g} qps, "
+              f"SLO ttft<={args.slo_ttft:g}s tpot<={args.slo_tpot:g}s, "
+              f"attainment>={args.attainment:.0%}")
+        hdr = (f"{'mode':<14} {'repl':>4} {'P/D':>5} {'$/hr':>7} {'attain':>7} "
+               f"{'ttft_p95':>9} {'tpot_p95':>9} {'feasible':>9}")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in plan["rows"]:
+            pd = (f"{r['prefill']}/{r['decode']}"
+                  if r["mode"] == "disaggregated" else "-")
+            if "error" in r:
+                print(f"{r['mode']:<14} {r['replicas']:>4} {pd:>5} "
+                      f"{r['cost_per_hr']:>7.2f} {'-':>7} {'-':>9} {'-':>9} "
+                      f"{'no (kv)':>9}")
+                continue
+            print(f"{r['mode']:<14} {r['replicas']:>4} {pd:>5} "
+                  f"{r['cost_per_hr']:>7.2f} {r['goodput_frac']:>7.0%} "
+                  f"{r['ttft_p95']:>8.2f}s {r['tpot_p95'] * 1e3:>7.1f}ms "
+                  f"{'YES' if r['feasible'] else 'no':>9}")
+        best = plan["best"]
+        if best is None:
+            print("# no feasible plan within the sweep — raise "
+                  "--plan-max-replicas or relax the SLOs")
+        else:
+            pd = (f" ({best['prefill']}P/{best['decode']}D)"
+                  if best["mode"] == "disaggregated" else "")
+            print(f"# cheapest feasible: {best['mode']}{pd} x{best['replicas']} "
+                  f"at ${best['cost_per_hr']:.2f}/hr "
+                  f"({best['goodput_frac']:.0%} attainment)")
+        return
+
+    modes = (["colocated", "disaggregated"] if args.mode == "both"
+             else [args.mode])
+    n = args.replicas
+    n_p = args.prefill_replicas if args.prefill_replicas is not None else n // 2
+    print(f"# {cfg.name} cluster | {n} replicas [{args.hw}] tp={args.tp} | "
+          f"{len(reqs)} requests, {args.arrival} arrivals @ {args.qps:g} qps | "
+          f"router={args.router}")
+    hdr = (f"{'mode':<14} {'ttft p50/p95(s)':>15} {'tpot p50/p95(ms)':>16} "
+           f"{'e2e_p95':>8} {'tok/s':>7} {'goodput':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    results = {}
+    for mode in modes:
+        if mode == "disaggregated":
+            if n < 2:
+                print("disaggregated   (skipped: needs >= 2 replicas)")
+                continue
+            if not 1 <= n_p <= n - 1:
+                raise SystemExit(f"--prefill-replicas must be in [1, {n - 1}]")
+            pools = ["prefill"] * n_p + ["decode"] * (n - n_p)
+        else:
+            pools = ["mixed"] * n
+        spec = ClusterSpec(replicas=_replicas(args, n, pools),
+                           router=args.router, decode_router=args.decode_router,
+                           hit_frac=args.hit_frac)
+        try:
+            cres = simulate_cluster(reqs, cfg, spec)
+        except ValueError as e:
+            print(f"{mode:<14} (skipped: {e})")
+            continue
+        s = summarize_cluster(cres, slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
+        results[mode] = (spec, cres, s)
+        label = mode if mode == "colocated" else f"disagg {n_p}P/{n - n_p}D"
+        print(_fmt_row(label, s))
+
+    for mode, (spec, cres, s) in results.items():
+        print(f"\n# {mode}: ${cluster_price_per_hr(spec):.2f}/hr, "
+              f"preemptions={s['preemptions']}, "
+              f"util=[{', '.join(f'{u:.0%}' for u in s['replica_util'])}]"
+              + (f", kv-transfer: {s['xfer_count']} moves, {s['xfer_gb']:.2f} GB, "
+                 f"{s['xfer_s_mean'] * 1e3:.2f} ms mean (p2p), "
+                 f"{s['xfer_share']:.2%} of e2e"
+                 if cres.mode == "disaggregated" else "")
+              + (f", prefix_hits={s['prefix_hits']}"
+                 if args.router == "affinity" else ""))
+        for pool, ps in pool_summaries(cres, slo_ttft=args.slo_ttft,
+                                       slo_tpot=args.slo_tpot).items():
+            print(f"  pool {pool:<8} x{ps['replicas']}: "
+                  f"ttft p95 {ps['ttft_p95']:.2f}s, "
+                  f"tpot p95 {ps['tpot_p95'] * 1e3:.1f}ms, "
+                  f"goodput {ps['goodput_frac']:.0%}, "
+                  f"util {ps['util_mean']:.0%}, "
+                  f"peak KV {ps['peak_kv_gb']:.1f} GB, "
+                  f"preempt {ps['preemptions']}")
+
+
+if __name__ == "__main__":
+    main()

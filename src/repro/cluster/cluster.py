@@ -1,0 +1,324 @@
+"""Multi-replica serving cluster simulator.
+
+Composes N `repro.sim.ReplicaSim` replicas under one shared arrival
+stream. Requests are dispatched by a pluggable router at their arrival
+instant (replicas are co-simulated event-by-event, so the router observes
+replica state at the dispatch time); each replica then prices its own
+engine iterations with its own `ServingCostModel`, so heterogeneous
+hardware / parallelism / scheduler mixes are first-class.
+
+Two cluster organizations:
+
+  * colocated     — every replica is a `mixed` pool member serving whole
+                    requests (prefill + decode), the classic data-parallel
+                    deployment.
+  * disaggregated — `prefill` replicas run prompt processing only (the
+                    first token streams out of the prefill logits), then
+                    hand the sequence's KV cache to a `decode` replica
+                    over a `comm.p2p`-priced transfer (volume from §3.5's
+                    `kv_cache_bytes` via `kv_handoff_bytes`); the decode
+                    replica resumes mid-stream via `ReplicaSim.push(
+                    cached=prompt, generated=1)`. The transfer sits
+                    between the first and second token, where it belongs
+                    in the TPOT accounting.
+
+Cluster-level records stitch the per-stage records back into one
+`ReqRecord` per request (arrival at the cluster, TTFT from the prefill
+stage, finish from the decode stage), so `summarize_records` reports the
+same SLO vocabulary at replica, pool, and cluster level.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass, field, replace
+
+from repro.configs.base import ModelConfig
+from repro.core import comm as C
+from repro.core.hardware import HardwareSpec, NetLevel, get_hardware
+from repro.sim.costmodel import ServingCostModel
+from repro.sim.metrics import summarize_records
+from repro.sim.scheduler import ReplicaSim, ReqRecord, SchedConfig, SimResult
+from repro.sim.workload import SimRequest
+
+from repro.cluster.router import AffinityRouter, ReplicaView, make_router
+
+POOLS = ("mixed", "prefill", "decode")
+_INF = float("inf")
+
+
+@dataclass(frozen=True)
+class ReplicaSpec:
+    """One replica: a device group running its own serving engine."""
+
+    hw: HardwareSpec | str = "h100"
+    tp: int = 1
+    prec: int = 2
+    pool: str = "mixed"  # mixed | prefill | decode
+    sched: SchedConfig = field(default_factory=SchedConfig)
+    ctx_quantum: int = 16
+    kv_block_tokens: int = 0
+
+    def resolve_hw(self) -> HardwareSpec:
+        return get_hardware(self.hw) if isinstance(self.hw, str) else self.hw
+
+    def cost_key(self) -> tuple:
+        return (self.resolve_hw().name, self.tp, self.prec,
+                self.ctx_quantum, self.kv_block_tokens)
+
+    def build_cost(self, cfg: ModelConfig) -> ServingCostModel:
+        return ServingCostModel(cfg, self.resolve_hw(), tp=self.tp, prec=self.prec,
+                                ctx_quantum=self.ctx_quantum,
+                                kv_block_tokens=self.kv_block_tokens)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    replicas: tuple[ReplicaSpec, ...]
+    router: str = "jsq"  # arrival routing (mixed / prefill pool)
+    decode_router: str = "least_kv"  # KV-handoff routing (decode pool)
+    hit_frac: float = 0.5  # affinity router's prefill-cache discount
+    xfer_net: NetLevel | None = None  # None -> decode replica's top net level
+
+    @property
+    def disaggregated(self) -> bool:
+        return any(r.pool != "mixed" for r in self.replicas)
+
+    def pool_indices(self, pool: str) -> list[int]:
+        return [i for i, r in enumerate(self.replicas) if r.pool == pool]
+
+    def validate(self) -> None:
+        if not self.replicas:
+            raise ValueError("cluster needs at least one replica")
+        for r in self.replicas:
+            if r.pool not in POOLS:
+                raise ValueError(f"unknown pool {r.pool!r}; choose from {POOLS}")
+        if self.disaggregated:
+            if self.pool_indices("mixed"):
+                raise ValueError(
+                    "mixed replicas cannot coexist with prefill/decode pools")
+            if not self.pool_indices("prefill") or not self.pool_indices("decode"):
+                raise ValueError(
+                    "disaggregated cluster needs >= 1 prefill AND >= 1 decode replica")
+        # mid-stream entry (KV handoffs, prefix-cache hits) needs a policy
+        # that can resume from cached state — static batching cannot
+        static = [i for i, r in enumerate(self.replicas)
+                  if r.sched.policy == "static"]
+        if static and self.disaggregated:
+            raise ValueError(
+                "static-policy replicas cannot accept disaggregated KV "
+                f"handoffs (replicas {static}); use continuous or chunked")
+        if static and self.router == "affinity" and self.hit_frac > 0:
+            raise ValueError(
+                "affinity prefix-cache discounts cannot apply to static-policy "
+                f"replicas (replicas {static}); use continuous/chunked or "
+                "hit_frac=0")
+
+
+@dataclass
+class ClusterResult:
+    mode: str  # colocated | disaggregated
+    records: list[ReqRecord]  # cluster-level (stitched across stages)
+    replica_results: list[SimResult]
+    replica_pools: list[str]
+    assignments: dict  # rid -> (serving/prefill replica, decode replica | -1)
+    xfer_count: int = 0
+    xfer_bytes: float = 0.0
+    xfer_seconds: float = 0.0
+    prefix_hits: int = 0
+
+    @property
+    def makespan(self) -> float:
+        if not self.records:
+            return 0.0
+        return (max(r.finish for r in self.records)
+                - min(r.arrival for r in self.records))
+
+
+def _views(sims: list[ReplicaSim], idxs: list[int]) -> list[ReplicaView]:
+    return [ReplicaView(i, sims[i].now, sims[i].queue_len, sims[i].live,
+                        sims[i].kv_used, sims[i].cap) for i in idxs]
+
+
+def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
+                     spec: ClusterSpec, *,
+                     _cost_cache: dict | None = None) -> ClusterResult:
+    """Co-simulate the cluster over one shared arrival stream.
+
+    `_cost_cache` lets sweeps (the capacity planner) share memoized
+    `ServingCostModel`s across many cluster candidates."""
+    spec.validate()
+    cache = _cost_cache if _cost_cache is not None else {}
+    costs = []
+    for rs in spec.replicas:
+        key = rs.cost_key()
+        if key not in cache:
+            cache[key] = rs.build_cost(cfg)
+        costs.append(cache[key])
+    sims = [ReplicaSim(cost, rs.sched, name=f"r{i}:{rs.pool}")
+            for i, (rs, cost) in enumerate(zip(spec.replicas, costs))]
+    ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    if spec.disaggregated:
+        return _run_disaggregated(ordered, spec, sims, costs)
+    return _run_colocated(ordered, spec, sims)
+
+
+# ---------------------------------------------------------------- colocated
+def _run_colocated(ordered, spec, sims) -> ClusterResult:
+    router = make_router(spec.router, hit_frac=spec.hit_frac)
+    idxs = list(range(len(sims)))
+    assignments = {}
+    for req in ordered:
+        for s in sims:
+            s.run_until(req.arrival)
+        i, cached = router.pick(req, _views(sims, idxs))
+        sims[i].push(req, cached=cached)
+        assignments[req.rid] = (i, -1)
+    for s in sims:
+        s.run()
+    records = sorted((rec for s in sims for rec in s.res.records),
+                     key=lambda r: r.rid)
+    return ClusterResult(
+        mode="colocated", records=records,
+        replica_results=[s.res for s in sims],
+        replica_pools=[r.pool for r in spec.replicas],
+        assignments=assignments,
+        prefix_hits=router.hits if isinstance(router, AffinityRouter) else 0)
+
+
+# ------------------------------------------------------------- disaggregated
+def _run_disaggregated(ordered, spec, sims, costs) -> ClusterResult:
+    p_idx = spec.pool_indices("prefill")
+    d_idx = spec.pool_indices("decode")
+    p_set = set(p_idx)
+    p_router = make_router(spec.router, hit_frac=spec.hit_frac)
+    d_router = make_router(spec.decode_router)
+    net = spec.xfer_net or costs[d_idx[0]].hw.net[-1]
+
+    arrivals = deque(ordered)
+    orig = {r.rid: r for r in ordered}
+    xfers: list[tuple[float, int, SimRequest]] = []  # heap: (ready, seq, req)
+    seq = 0
+    prefill_recs: dict[int, ReqRecord] = {}
+    decode_recs: dict[int, ReqRecord] = {}
+    assignments: dict[int, list[int]] = {}
+    xfer_count, xfer_bytes, xfer_seconds = 0, 0.0, 0.0
+
+    def harvest(i: int, done: list[ReqRecord]) -> None:
+        """Prefill completions become KV transfers to the decode pool."""
+        nonlocal seq, xfer_count, xfer_bytes, xfer_seconds
+        if i not in p_set:
+            return
+        for rec in done:
+            req = orig[rec.rid]
+            if req.output <= 1:
+                continue  # single-token request: served entirely by prefill
+            nbytes = costs[i].kv_handoff_bytes(req.prompt)
+            dt = C.p2p(nbytes, net)
+            heapq.heappush(xfers, (rec.finish + dt, seq, req))
+            seq += 1
+            xfer_count += 1
+            xfer_bytes += nbytes
+            xfer_seconds += dt
+
+    def advance_all(t: float) -> None:
+        for i, s in enumerate(sims):
+            while s.has_work and s.now < t:
+                harvest(i, s.step())
+
+    while True:
+        t_arr = arrivals[0].arrival if arrivals else _INF
+        t_xfer = xfers[0][0] if xfers else _INF
+        if t_arr == _INF and t_xfer == _INF:
+            progressed = False
+            for i, s in enumerate(sims):
+                if s.has_work:
+                    progressed = True
+                    harvest(i, s.step())
+            if arrivals or xfers:
+                continue
+            if not progressed:
+                break
+            continue
+        t_evt = min(t_arr, t_xfer)
+        advance_all(t_evt)
+        # a harvest during the advance can surface an earlier transfer;
+        # re-resolve so events are always dispatched in global time order
+        t_arr = arrivals[0].arrival if arrivals else _INF
+        t_xfer = xfers[0][0] if xfers else _INF
+        if min(t_arr, t_xfer) < t_evt:
+            continue
+        if t_arr <= t_xfer:
+            req = arrivals.popleft()
+            i, cached = p_router.pick(req, _views(sims, p_idx))
+            # prefill stage ends at the first token; decode happens elsewhere
+            prefill_recs[req.rid] = sims[i].push(replace(req, output=1),
+                                                cached=cached)
+            assignments[req.rid] = [i, -1]
+        else:
+            ready, _, req = heapq.heappop(xfers)
+            j, _ = d_router.pick(req, _views(sims, d_idx))
+            decode_recs[req.rid] = sims[j].push(
+                replace(req, arrival=ready), cached=req.prompt, generated=1)
+            assignments[req.rid][1] = j
+
+    records = []
+    for req in ordered:
+        pre = prefill_recs[req.rid]
+        dec = decode_recs.get(req.rid)
+        records.append(ReqRecord(
+            req.rid, req.arrival, req.prompt, req.output,
+            admitted=pre.admitted, first_token=pre.first_token,
+            finish=dec.finish if dec is not None else pre.finish,
+            preemptions=pre.preemptions + (dec.preemptions if dec else 0)))
+    return ClusterResult(
+        mode="disaggregated", records=records,
+        replica_results=[s.res for s in sims],
+        replica_pools=[r.pool for r in spec.replicas],
+        assignments={k: tuple(v) for k, v in assignments.items()},
+        xfer_count=xfer_count, xfer_bytes=xfer_bytes, xfer_seconds=xfer_seconds,
+        prefix_hits=p_router.hits if isinstance(p_router, AffinityRouter) else 0)
+
+
+# ------------------------------------------------------------------ metrics
+def summarize_cluster(cres: ClusterResult, *, slo_ttft: float | None = None,
+                      slo_tpot: float | None = None) -> dict:
+    """Cluster-level SLO metric dict over the stitched records, plus
+    aggregate counters and the KV-transfer overhead share."""
+    span = cres.makespan
+    out: dict = {"mode": cres.mode, "replicas": len(cres.replica_results)}
+    out.update(summarize_records(cres.records, span=span,
+                                 slo_ttft=slo_ttft, slo_tpot=slo_tpot))
+    out["iterations"] = sum(r.iterations for r in cres.replica_results)
+    out["preemptions"] = sum(r.preemptions for r in cres.replica_results)
+    out["prefix_hits"] = cres.prefix_hits
+    out["xfer_count"] = cres.xfer_count
+    out["xfer_gb"] = cres.xfer_bytes / 1e9
+    out["xfer_s_mean"] = (cres.xfer_seconds / cres.xfer_count
+                          if cres.xfer_count else 0.0)
+    e2e_total = sum(r.e2e for r in cres.records)
+    out["xfer_share"] = cres.xfer_seconds / e2e_total if e2e_total > 0 else 0.0
+    denom = max(span, 1e-12)
+    out["replica_util"] = [r.busy_s / denom for r in cres.replica_results]
+    return out
+
+
+def pool_summaries(cres: ClusterResult, *, slo_ttft: float | None = None,
+                   slo_tpot: float | None = None) -> dict:
+    """Per-pool SLO metrics (over the pool replicas' own stage records)
+    plus pool utilization against the cluster makespan."""
+    span = max(cres.makespan, 1e-12)
+    out = {}
+    for pool in dict.fromkeys(cres.replica_pools):  # stable order
+        idxs = [i for i, p in enumerate(cres.replica_pools) if p == pool]
+        recs = [rec for i in idxs for rec in cres.replica_results[i].records]
+        s = summarize_records(recs, span=cres.makespan,
+                              slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+        s["replicas"] = len(idxs)
+        s["util_mean"] = (sum(cres.replica_results[i].busy_s for i in idxs)
+                          / (len(idxs) * span))
+        s["preemptions"] = sum(cres.replica_results[i].preemptions for i in idxs)
+        s["peak_kv_gb"] = max(cres.replica_results[i].peak_kv for i in idxs) / 1e9
+        out[pool] = s
+    return out

@@ -1,0 +1,125 @@
+"""SLO-driven capacity planner.
+
+Sweeps cluster size (and, for disaggregated clusters, the prefill/decode
+pool split) at a target arrival rate, prices every candidate with a
+$/device-hour table, and returns the cheapest configuration whose SLO
+attainment (fraction of requests meeting BOTH the TTFT and TPOT SLOs —
+`goodput_frac`) clears the target. This is the cluster-level question the
+paper's per-device-group model (§4.3) exists to inform: how much hardware,
+and in what organization, a latency target actually costs.
+
+Prices are public on-demand list-price ballparks (documented assumptions,
+overridable via `price_table`); what matters for plan *ranking* is their
+ratio, not their absolute level.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+from repro.sim.scheduler import SchedConfig
+from repro.sim.workload import Workload
+
+from repro.cluster.cluster import (
+    ClusterSpec,
+    ReplicaSpec,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+# $/device-hour, on-demand cloud ballparks (ranking inputs, not quotes)
+DEFAULT_PRICE_PER_DEV_HR = {
+    "a100": 1.8,
+    "a100-80g": 1.8,
+    "h100": 3.9,
+    "h100-sxm": 3.9,
+    "h200": 4.5,
+    "b200": 6.9,
+    "tpu-v5e": 1.2,
+    "v5e": 1.2,
+}
+
+
+def replica_price_per_hr(rs: ReplicaSpec, table: dict | None = None) -> float:
+    table = table or DEFAULT_PRICE_PER_DEV_HR
+    name = (rs.hw if isinstance(rs.hw, str) else rs.hw.name).lower()
+    if name not in table:
+        raise ValueError(
+            f"no $/hr price for hardware {name!r}; pass price_table= "
+            f"(known: {sorted(table)})")
+    return table[name] * rs.tp
+
+
+def cluster_price_per_hr(spec: ClusterSpec, table: dict | None = None) -> float:
+    return sum(replica_price_per_hr(rs, table) for rs in spec.replicas)
+
+
+def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
+                  slo_ttft: float, slo_tpot: float, attainment: float = 0.95,
+                  hw: str = "h100", tp: int = 1, prec: int = 2,
+                  sched: SchedConfig | None = None, router: str = "jsq",
+                  decode_router: str = "least_kv", hit_frac: float = 0.5,
+                  kv_block_tokens: int = 0, ctx_quantum: int = 16,
+                  min_replicas: int = 1, max_replicas: int = 8,
+                  modes=("colocated", "disaggregated"),
+                  price_table: dict | None = None,
+                  early_stop: bool = True) -> dict:
+    """Sweep replica count / pool split at `qps`; return {"rows", "best"}.
+
+    Every candidate serves the SAME request stream (`workload` regenerated
+    at the target rate), so rows are comparable point-for-point. A row is
+    feasible when its `goodput_frac >= attainment`. With `early_stop`,
+    each mode stops growing the cluster once a feasible size is found —
+    larger clusters of the same hardware only cost more."""
+    sched = sched or SchedConfig()
+    reqs = replace(workload, qps=qps).generate()
+    cost_cache: dict = {}
+    rows: list[dict] = []
+
+    def candidate(mode: str, n_prefill: int, n_decode: int) -> dict:
+        n = n_prefill + n_decode
+        pools = (["mixed"] * n if mode == "colocated"
+                 else ["prefill"] * n_prefill + ["decode"] * n_decode)
+        replicas = tuple(
+            ReplicaSpec(hw=hw, tp=tp, prec=prec, pool=pool, sched=sched,
+                        ctx_quantum=ctx_quantum, kv_block_tokens=kv_block_tokens)
+            for pool in pools)
+        spec = ClusterSpec(replicas=replicas, router=router,
+                           decode_router=decode_router, hit_frac=hit_frac)
+        row = {"mode": mode, "replicas": n,
+               "prefill": n_prefill if mode == "disaggregated" else 0,
+               "decode": n_decode if mode == "disaggregated" else 0,
+               "cost_per_hr": cluster_price_per_hr(spec, price_table)}
+        try:
+            cres = simulate_cluster(reqs, cfg, spec, _cost_cache=cost_cache)
+        except ValueError as e:  # e.g. model KV footprint exceeds a pool budget
+            row.update(feasible=False, error=str(e), goodput_frac=0.0)
+            return row
+        s = summarize_cluster(cres, slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+        row.update(
+            goodput_frac=s["goodput_frac"], goodput_rps=s["goodput_rps"],
+            ttft_p95=s["ttft_p95"], tpot_p95=s["tpot_p95"],
+            tokens_per_s=s["tokens_per_s"], xfer_share=s["xfer_share"],
+            preemptions=s["preemptions"],
+            util_mean=sum(s["replica_util"]) / len(s["replica_util"]),
+            feasible=s["goodput_frac"] >= attainment)
+        return row
+
+    for mode in modes:
+        lo = max(min_replicas, 2) if mode == "disaggregated" else min_replicas
+        for n in range(lo, max_replicas + 1):
+            splits = ([(p, n - p) for p in range(1, n)]
+                      if mode == "disaggregated" else [(0, n)])
+            feasible_here = False
+            for n_p, n_d in splits:
+                row = candidate(mode, n_p, n_d)
+                rows.append(row)
+                feasible_here |= row["feasible"]
+            if feasible_here and early_stop:
+                break
+
+    feasible = [r for r in rows if r["feasible"]]
+    best = min(feasible, key=lambda r: (r["cost_per_hr"], -r["goodput_frac"]),
+               default=None)
+    return {"rows": rows, "best": best, "qps": qps, "attainment": attainment}

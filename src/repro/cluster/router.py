@@ -1,0 +1,123 @@
+"""Pluggable request routers for the cluster simulator.
+
+A router sees lightweight `ReplicaView` snapshots (clock, queue depth,
+live sequences, KV occupancy) of the replicas in one pool and picks the
+replica a request is dispatched to. All policies are deterministic
+functions of the views and the router's own state, so a fixed workload
+seed yields a fixed assignment.
+
+`affinity` additionally models the prefix/session cache that affinity
+routing exists to exploit: a request landing on the replica that last
+served its session skips `hit_frac` of its prompt prefill (the prefix is
+already resident), entering the replica with `cached` tokens. Cache
+capacity/eviction is not modeled yet — see ROADMAP.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.sim.workload import SimRequest
+
+ROUTERS = ("round_robin", "jsq", "least_kv", "affinity")
+
+
+@dataclass(frozen=True)
+class ReplicaView:
+    """Read-only snapshot of one replica, as the router observes it."""
+
+    idx: int  # global replica index
+    now: float
+    queue_len: int  # requests queued, not yet admitted
+    live: int  # sequences holding slots
+    kv_used: float  # bytes currently materialized
+    kv_capacity: float
+
+    @property
+    def depth(self) -> int:
+        return self.queue_len + self.live
+
+    @property
+    def kv_frac(self) -> float:
+        return self.kv_used / self.kv_capacity if self.kv_capacity > 0 else 0.0
+
+
+class Router:
+    """`pick()` returns (chosen replica idx, prefix-cached prompt tokens)."""
+
+    name = "base"
+
+    def pick(self, req: SimRequest, views: list[ReplicaView]) -> tuple[int, int]:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def pick(self, req, views):
+        v = views[self._i % len(views)]
+        self._i += 1
+        return v.idx, 0
+
+
+class JoinShortestQueueRouter(Router):
+    name = "jsq"
+
+    def pick(self, req, views):
+        v = min(views, key=lambda v: (v.depth, v.kv_used, v.idx))
+        return v.idx, 0
+
+
+class LeastKVLoadRouter(Router):
+    name = "least_kv"
+
+    def pick(self, req, views):
+        v = min(views, key=lambda v: (v.kv_frac, v.depth, v.idx))
+        return v.idx, 0
+
+
+class AffinityRouter(Router):
+    """Session/prefix affinity with a modeled prefill-cache hit discount.
+
+    First request of a session is placed join-shortest-queue and pins the
+    session to that replica; subsequent requests follow it and enter with
+    `hit_frac` of their prompt already cached (capped at prompt - 1: the
+    final prompt token always runs, it produces the first logits)."""
+
+    name = "affinity"
+
+    def __init__(self, hit_frac: float = 0.5):
+        if not 0.0 <= hit_frac < 1.0:
+            raise ValueError("hit_frac must be in [0, 1)")
+        self.hit_frac = float(hit_frac)
+        self._home: dict[int, int] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def pick(self, req, views):
+        eligible = {v.idx for v in views}
+        home = self._home.get(req.session, -1) if req.session >= 0 else -1
+        if home in eligible:
+            self.hits += 1
+            cached = min(int(req.prompt * self.hit_frac), req.prompt - 1)
+            return home, max(cached, 0)
+        self.misses += 1
+        v = min(views, key=lambda v: (v.depth, v.kv_used, v.idx))
+        if req.session >= 0:
+            self._home[req.session] = v.idx
+        return v.idx, 0
+
+
+def make_router(name: str, *, hit_frac: float = 0.5) -> Router:
+    if name == "round_robin":
+        return RoundRobinRouter()
+    if name == "jsq":
+        return JoinShortestQueueRouter()
+    if name == "least_kv":
+        return LeastKVLoadRouter()
+    if name == "affinity":
+        return AffinityRouter(hit_frac)
+    raise ValueError(f"unknown router {name!r}; choose from {ROUTERS}")

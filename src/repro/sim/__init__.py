@@ -30,9 +30,11 @@ seconds. `python -m benchmarks.run serving` emits the same numbers as CSV.
 """
 
 from repro.sim.costmodel import ServingCostModel
-from repro.sim.metrics import dominates, pareto_sweep, summarize
+from repro.sim.metrics import dominates, pareto_sweep, summarize, summarize_records
 from repro.sim.scheduler import (
+    ADMISSIONS,
     POLICIES,
+    ReplicaSim,
     ReqRecord,
     SchedConfig,
     SimResult,
@@ -41,8 +43,10 @@ from repro.sim.scheduler import (
 from repro.sim.workload import LengthDist, SimRequest, Workload, to_engine_requests
 
 __all__ = [
+    "ADMISSIONS",
     "LengthDist",
     "POLICIES",
+    "ReplicaSim",
     "ReqRecord",
     "SchedConfig",
     "ServingCostModel",
@@ -53,5 +57,6 @@ __all__ = [
     "pareto_sweep",
     "simulate",
     "summarize",
+    "summarize_records",
     "to_engine_requests",
 ]

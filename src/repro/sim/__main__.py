@@ -13,6 +13,7 @@ import argparse
 from repro.configs import get_config
 from repro.core.hardware import get_hardware
 from repro.sim import (
+    ADMISSIONS,
     LengthDist,
     POLICIES,
     SchedConfig,
@@ -44,6 +45,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--policy", default="all", choices=list(POLICIES) + ["all"])
     p.add_argument("--slots", type=int, default=16)
     p.add_argument("--token-budget", type=int, default=512)
+    p.add_argument("--admission", default="fcfs", choices=list(ADMISSIONS),
+                   help="admission order: fcfs, or edf on TTFT deadlines")
+    p.add_argument("--block-tokens", type=int, default=0,
+                   help="paged-KV page size in tokens (0 = contiguous)")
     p.add_argument("--kv-gb", type=float, default=None,
                    help="override KV budget (GB); default: DRAM minus weights")
     p.add_argument("--slo-ttft", type=float, default=2.0, help="seconds")
@@ -59,7 +64,8 @@ def main(argv=None) -> None:
     cfg = get_config(args.config)
     hw = get_hardware(args.hw)
     cost = ServingCostModel(cfg, hw, tp=args.tp, prec=args.prec,
-                            ctx_quantum=args.ctx_quantum)
+                            ctx_quantum=args.ctx_quantum,
+                            kv_block_tokens=args.block_tokens)
     wl = Workload(
         name=args.trace or "synthetic",
         qps=args.qps,
@@ -85,7 +91,8 @@ def main(argv=None) -> None:
     print("-" * len(hdr))
     for policy in policies:
         sc = SchedConfig(policy=policy, slots=args.slots,
-                         token_budget=args.token_budget, kv_capacity=kv_cap)
+                         token_budget=args.token_budget, kv_capacity=kv_cap,
+                         admission=args.admission, slo_ttft=args.slo_ttft)
         s = summarize(simulate(reqs, cost, sc),
                       slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
         print(f"{policy:<11} "
@@ -96,10 +103,12 @@ def main(argv=None) -> None:
 
     if args.sweep:
         slot_counts = [int(x) for x in args.sweep.split(",") if x]
-        rows = pareto_sweep(reqs, cost, policies=("static", "continuous"),
+        rows = pareto_sweep(reqs, cost, policies=POLICIES,
                             slot_counts=slot_counts,
                             base=SchedConfig(token_budget=args.token_budget,
-                                             kv_capacity=kv_cap),
+                                             kv_capacity=kv_cap,
+                                             admission=args.admission,
+                                             slo_ttft=args.slo_ttft),
                             slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
         print(f"\n# throughput-latency sweep (equal KV budget)")
         print(f"{'policy':<11} {'slots':>5} {'tok/s':>8} {'e2e_p95 (s)':>12} {'pareto':>7}")

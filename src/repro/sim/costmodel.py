@@ -15,7 +15,12 @@ bit-for-bit in regression tests, 8-32 for large sweeps).
 
 KV admission comes from the paper's §3.5 cache formula (`kv_cache_bytes`,
 GQA/sliding-window aware, + recurrent state for SSM/hybrid archs) checked
-against the per-device DRAM capacity left after weights.
+against the per-device DRAM capacity left after weights. Setting
+`kv_block_tokens > 0` switches admission to page-granular (vLLM-style)
+accounting: every sequence's context is rounded up to whole pages, so the
+scheduler sees allocation (with internal fragmentation) rather than exact
+occupancy; `kv_bytes(ctx, exact=True)` still returns the unpaged figure so
+the waste is measurable.
 
 Note: this intentionally re-prices the same op graph `inference_latency`
 builds rather than refactoring that function onto this class —
@@ -48,6 +53,7 @@ class ServingCostModel:
     per_token_overhead: float = 300e-6  # per engine step (matches predict.py)
     ctx_quantum: int = 8
     kv_headroom: float = 0.9  # fraction of post-weight DRAM usable for KV
+    kv_block_tokens: int = 0  # paged-KV page size in tokens (0 = contiguous)
     _memo: dict = field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------------ costs
@@ -110,13 +116,28 @@ class ServingCostModel:
         return hit
 
     # --------------------------------------------------------------- capacity
-    def kv_bytes(self, ctx: int) -> float:
-        """Per-device cache bytes for ONE sequence holding `ctx` tokens."""
+    def kv_bytes(self, ctx: int, *, exact: bool = False) -> float:
+        """Per-device cache bytes for ONE sequence holding `ctx` tokens.
+        With `kv_block_tokens` set, returns the page-granular *allocation*
+        (ctx rounded up to whole pages); `exact=True` bypasses paging."""
         if ctx <= 0:
             return 0.0
-        b = kv_cache_bytes(self.cfg, 1, int(ctx), self.prec)
+        alloc = int(ctx)
+        if self.kv_block_tokens > 0 and not exact:
+            blk = self.kv_block_tokens
+            alloc = -(-alloc // blk) * blk
+        b = kv_cache_bytes(self.cfg, 1, alloc, self.prec)
         b += recurrent_state_bytes(self.cfg, 1)
         return b / self.tp
+
+    def kv_handoff_bytes(self, ctx: int) -> float:
+        """Total bytes (summed over all tp shards) to migrate one sequence's
+        cache to another replica — the prefill->decode KV transfer volume in
+        disaggregated serving, priced by `comm.p2p` at the cluster layer."""
+        if ctx <= 0:
+            return 0.0
+        return (kv_cache_bytes(self.cfg, 1, int(ctx), self.prec)
+                + recurrent_state_bytes(self.cfg, 1))
 
     @property
     def weight_bytes(self) -> float:

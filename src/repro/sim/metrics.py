@@ -5,6 +5,10 @@ One metric vocabulary shared with `Breakdown.ttft`/`.tpot` in
 token, TPOT the mean inter-token gap after it. Goodput counts only the
 requests that met every configured SLO (the inference-perf convention),
 normalized by makespan.
+
+`summarize_records` aggregates any collection of `ReqRecord`s — one
+replica's, one pool's, or a whole cluster's stitched records — so
+`repro.sim` and `repro.cluster` report the same vocabulary at every level.
 """
 
 from __future__ import annotations
@@ -18,31 +22,28 @@ from repro.sim.scheduler import SchedConfig, SimResult, simulate
 PCTS = (50, 95, 99)
 
 
-def summarize(res: SimResult, *, slo_ttft: float | None = None,
-              slo_tpot: float | None = None) -> dict:
-    """Aggregate a SimResult into the SLO metric dict the CLI/benchmarks print."""
-    recs = res.records
+def summarize_records(records, *, span: float | None = None,
+                      slo_ttft: float | None = None,
+                      slo_tpot: float | None = None) -> dict:
+    """SLO metric dict over a bag of `ReqRecord`s. `span` is the makespan
+    used to normalize throughput (defaults to the records' own span)."""
+    recs = list(records)
     ttft = np.array([r.ttft for r in recs])
     e2e = np.array([r.e2e for r in recs])
     tpot = np.array([r.tpot for r in recs if r.output > 1])
-    out: dict = {
-        "policy": res.policy,
-        "requests": len(recs),
-        "iterations": res.iterations,
-        "decode_steps": res.decode_steps,
-        "preemptions": res.preemptions,
-        "peak_kv_gb": res.peak_kv / 1e9,
-        "kv_capacity_gb": res.kv_capacity / 1e9,
-        "makespan_s": res.makespan,
-    }
+    if span is None:
+        span = (max(r.finish for r in recs) - min(r.arrival for r in recs)
+                if recs else 0.0)
+    out: dict = {"requests": len(recs)}
     for name, xs in (("ttft", ttft), ("tpot", tpot), ("e2e", e2e)):
         for p in PCTS:
             out[f"{name}_p{p}"] = float(np.percentile(xs, p)) if len(xs) else 0.0
         out[f"{name}_mean"] = float(xs.mean()) if len(xs) else 0.0
     total_tokens = sum(r.output for r in recs)
-    span = max(res.makespan, 1e-12)
-    out["tokens_per_s"] = total_tokens / span
-    out["requests_per_s"] = len(recs) / span
+    denom = max(span, 1e-12)
+    out["makespan_s"] = span
+    out["tokens_per_s"] = total_tokens / denom
+    out["requests_per_s"] = len(recs) / denom
     ok = np.ones(len(recs), bool)
     if slo_ttft is not None:
         ok &= ttft <= slo_ttft
@@ -50,11 +51,30 @@ def summarize(res: SimResult, *, slo_ttft: float | None = None,
         tpot_all = np.array([r.tpot for r in recs])
         ok &= tpot_all <= slo_tpot
     out["goodput_frac"] = float(ok.mean()) if len(recs) else 0.0
-    out["goodput_rps"] = float(ok.sum()) / span
+    out["goodput_rps"] = float(ok.sum()) / denom
     return out
 
 
-def pareto_sweep(requests, cost, *, policies=("static", "continuous"),
+def summarize(res: SimResult, *, slo_ttft: float | None = None,
+              slo_tpot: float | None = None) -> dict:
+    """Aggregate a SimResult into the SLO metric dict the CLI/benchmarks print."""
+    out: dict = {
+        "policy": res.policy,
+        "iterations": res.iterations,
+        "decode_steps": res.decode_steps,
+        "preemptions": res.preemptions,
+        "peak_kv_gb": res.peak_kv / 1e9,
+        "kv_capacity_gb": res.kv_capacity / 1e9,
+        "busy_s": res.busy_s,
+        "kv_waste_gb": res.peak_kv_waste / 1e9,
+        "kv_waste_frac": res.peak_kv_waste / res.peak_kv if res.peak_kv else 0.0,
+    }
+    out.update(summarize_records(res.records, span=res.makespan,
+                                 slo_ttft=slo_ttft, slo_tpot=slo_tpot))
+    return out
+
+
+def pareto_sweep(requests, cost, *, policies=("static", "continuous", "chunked"),
                  slot_counts=(1, 2, 4, 8, 16), base: SchedConfig | None = None,
                  slo_ttft: float | None = None,
                  slo_tpot: float | None = None) -> list[dict]:
@@ -65,7 +85,8 @@ def pareto_sweep(requests, cost, *, policies=("static", "continuous"),
     rows = []
     for policy in policies:
         for slots in slot_counts:
-            sc = replace(base, policy=policy, slots=slots)
+            sc = replace(base, policy=policy, slots=slots,
+                         token_budget=max(base.token_budget, slots))
             s = summarize(simulate(requests, cost, sc),
                           slo_ttft=slo_ttft, slo_tpot=slo_tpot)
             s["slots"] = slots

@@ -8,7 +8,7 @@ batching servers schedule at), pricing each iteration with
                  admit up to `slots` queued requests, pad prompts to the
                  batch max, decode until the LONGEST request finishes.
   * continuous — slot-based continuous batching (Orca-style): free slots
-                 are refilled FCFS every iteration; admitted prompts are
+                 are refilled every iteration; admitted prompts are
                  prefilled whole, finished requests free their slot (and
                  KV) immediately.
   * chunked    — continuous + chunked prefill under a per-iteration token
@@ -16,18 +16,33 @@ batching servers schedule at), pricing each iteration with
                  decoder and the remainder on head-of-line prefill chunks,
                  bounding inter-token stalls behind long prompts.
 
+Admission order is pluggable: `fcfs` (arrival order, head-of-line blocks)
+or `edf` (earliest TTFT deadline first, deadline = arrival + slo_ttft with
+per-request overrides from `SimRequest.slo_ttft`) — EDF reorders admission
+only, never preempts for priority.
+
 KV accounting follows §3.5: per-sequence cache bytes at the current
 processed context, checked every iteration against the model's KV budget.
 When projected growth exceeds capacity the youngest-admitted request is
 preempted (KV dropped, request returned to the head of the queue) and
 later resumed by re-prefilling prompt + already-emitted tokens — the
 recompute-style preemption vLLM uses. The capacity invariant (`peak_kv <=
-kv_capacity`) is enforced, not just sampled.
+kv_capacity`) is enforced, not just sampled. With a page-granular cost
+model (`kv_block_tokens > 0`) the same checks run on page allocations and
+the internal fragmentation is reported as `SimResult.peak_kv_waste`.
 
 Token semantics mirror `ServeEngine`: completing a prefill yields the
 first output token directly from the prefill logits; each decode step
 processes the last emitted token and yields the next, so a request with
 `output` tokens costs one prefill + `output - 1` decode steps.
+
+`ReplicaSim` is the incremental (steppable) form of the event loop:
+`push()` enqueues requests at any time — optionally with pre-materialized
+KV (`cached`/`generated`), which is how prefix-cache hits and
+disaggregated prefill->decode handoffs enter mid-stream — and `step()`
+executes exactly one engine iteration, returning the records that
+finished in it. `simulate()` is the run-to-completion driver over one
+replica; `repro.cluster` interleaves many replicas on a shared timeline.
 """
 
 from __future__ import annotations
@@ -39,6 +54,7 @@ from repro.sim.costmodel import ServingCostModel
 from repro.sim.workload import SimRequest
 
 POLICIES = ("static", "continuous", "chunked")
+ADMISSIONS = ("fcfs", "edf")
 
 _MAX_ITERATIONS = 5_000_000  # runaway guard
 
@@ -49,6 +65,8 @@ class SchedConfig:
     slots: int = 16  # max concurrent sequences (static: batch size)
     token_budget: int = 512  # chunked: tokens processed per iteration
     kv_capacity: float | None = None  # bytes; None -> cost.kv_capacity_bytes
+    admission: str = "fcfs"  # fcfs | edf (earliest TTFT deadline first)
+    slo_ttft: float = 2.0  # EDF deadline offset for requests without their own
 
 
 @dataclass
@@ -88,6 +106,8 @@ class SimResult:
     preemptions: int = 0
     peak_kv: float = 0.0
     kv_capacity: float = 0.0
+    busy_s: float = 0.0  # summed iteration time (utilization numerator)
+    peak_kv_waste: float = 0.0  # paged-KV internal fragmentation at the peak
 
     @property
     def makespan(self) -> float:
@@ -126,119 +146,244 @@ class _Run:
         return self.generated >= self.req.output
 
 
-def simulate(requests: list[SimRequest], cost: ServingCostModel,
-             sc: SchedConfig | None = None) -> SimResult:
-    sc = sc or SchedConfig()
-    if sc.policy not in POLICIES:
-        raise ValueError(f"unknown policy {sc.policy!r}; choose from {POLICIES}")
-    if sc.slots < 1:
-        raise ValueError("slots must be >= 1")
-    if sc.policy == "chunked" and sc.token_budget < sc.slots:
-        raise ValueError(
-            "chunked prefill needs token_budget >= slots "
-            "(each live slot consumes one decode token per iteration)")
-    cap = sc.kv_capacity if sc.kv_capacity is not None else cost.kv_capacity_bytes
-    if len({r.rid for r in requests}) != len(requests):
-        raise ValueError("request rids must be unique")
-    for r in requests:
-        if r.prompt < 1 or r.output < 1:
+class ReplicaSim:
+    """One serving replica as a steppable discrete-event simulation."""
+
+    def __init__(self, cost: ServingCostModel, sc: SchedConfig | None = None,
+                 *, name: str = ""):
+        sc = sc or SchedConfig()
+        if sc.policy not in POLICIES:
+            raise ValueError(f"unknown policy {sc.policy!r}; choose from {POLICIES}")
+        if sc.admission not in ADMISSIONS:
             raise ValueError(
-                f"request {r.rid} has prompt={r.prompt}, output={r.output}; "
+                f"unknown admission {sc.admission!r}; choose from {ADMISSIONS}")
+        if sc.slots < 1:
+            raise ValueError("slots must be >= 1")
+        if sc.policy == "chunked" and sc.token_budget < sc.slots:
+            raise ValueError(
+                "chunked prefill needs token_budget >= slots "
+                "(each live slot consumes one decode token per iteration)")
+        self.cost = cost
+        self.sc = sc
+        self.name = name
+        self.cap = sc.kv_capacity if sc.kv_capacity is not None else cost.kv_capacity_bytes
+        self.now = 0.0
+        self.res = SimResult(sc.policy, [], [], kv_capacity=self.cap)
+        self._pending: deque[_Run] = deque()
+        self._running: list[_Run] = []
+        self._admit_seq = 0
+        self._rids: set[int] = set()
+        self._paged = getattr(cost, "kv_block_tokens", 0) > 0
+        # static-batching state
+        self._batch: list[_Run] = []
+        self._spad = 0
+        self._k = 0
+
+    # ------------------------------------------------------------- inspection
+    @property
+    def has_work(self) -> bool:
+        return bool(self._pending or self._running or self._batch)
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._pending)
+
+    @property
+    def live(self) -> int:
+        return len(self._running) + len(self._batch)
+
+    @property
+    def kv_used(self) -> float:
+        return sum(self.cost.kv_bytes(r.cached)
+                   for r in self._running + self._batch)
+
+    # ---------------------------------------------------------------- enqueue
+    def push(self, req: SimRequest, *, cached: int = 0, generated: int = 0) -> ReqRecord:
+        """Enqueue a request. `cached`/`generated` pre-materialize KV state:
+        a prefix-cache hit enters with `cached < prompt`, a disaggregated
+        decode handoff with `cached == prompt, generated == 1`."""
+        if req.rid in self._rids:
+            raise ValueError(f"duplicate rid {req.rid}")
+        if req.prompt < 1 or req.output < 1:
+            raise ValueError(
+                f"request {req.rid} has prompt={req.prompt}, output={req.output}; "
                 "both must be >= 1")
-        need = cost.kv_bytes(r.prompt + r.output)
-        if need > cap:
+        need = self.cost.kv_bytes(req.prompt + req.output)
+        if need > self.cap:
             raise ValueError(
-                f"request {r.rid} needs {need / 1e9:.2f} GB KV at full context "
-                f"but the budget is {cap / 1e9:.2f} GB — it can never be served")
-    ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
-    if sc.policy == "static":
-        return _run_static(ordered, cost, sc, cap)
-    return _run_continuous(ordered, cost, sc, cap, chunked=sc.policy == "chunked")
+                f"request {req.rid} needs {need / 1e9:.2f} GB KV at full context "
+                f"but the budget is {self.cap / 1e9:.2f} GB — it can never be served")
+        if generated < 0 or generated >= req.output:
+            raise ValueError(f"push generated={generated} outside [0, output)")
+        if cached < 0 or req.prompt + generated - cached < 1:
+            raise ValueError(
+                f"push cached={cached} leaves no tokens to process "
+                f"(prompt={req.prompt}, generated={generated})")
+        if self.sc.policy == "static" and (cached > 0 or generated > 0):
+            raise ValueError(
+                "static batching cannot enter mid-stream (pre-materialized "
+                "cached/generated KV state); use continuous or chunked")
+        rec = ReqRecord(req.rid, req.arrival, req.prompt, req.output)
+        self.res.records.append(rec)
+        self._rids.add(req.rid)
+        self._pending.append(_Run(req, rec, cached=cached, generated=generated))
+        return rec
 
+    # ------------------------------------------------------------- event loop
+    def step(self) -> list[ReqRecord]:
+        """Execute one engine iteration; returns records that finished."""
+        if not self.has_work:
+            return []
+        if self.sc.policy == "static":
+            return self._step_static()
+        return self._step_continuous()
 
-# ----------------------------------------------------------- static batching
-def _run_static(ordered: list[SimRequest], cost: ServingCostModel,
-                sc: SchedConfig, cap: float) -> SimResult:
-    res = SimResult(sc.policy, [], [], kv_capacity=cap)
-    recs = {r.rid: ReqRecord(r.rid, r.arrival, r.prompt, r.output) for r in ordered}
-    res.records = [recs[r.rid] for r in ordered]
-    pending = deque(ordered)
-    t = 0.0
-    while pending:
-        if pending[0].arrival > t:
-            t = pending[0].arrival
-        # form a batch: FCFS up to `slots`, padded-KV projection must fit
-        batch: list[SimRequest] = []
-        while pending and pending[0].arrival <= t and len(batch) < sc.slots:
-            cand = pending[0]
-            trial = batch + [cand]
+    def run_until(self, t: float) -> list[ReqRecord]:
+        """Advance while there is work and the clock is behind `t`."""
+        out: list[ReqRecord] = []
+        while self.has_work and self.now < t:
+            out += self.step()
+        return out
+
+    def run(self) -> list[ReqRecord]:
+        """Drain everything queued (run-to-completion)."""
+        out: list[ReqRecord] = []
+        while self.has_work:
+            out += self.step()
+        return out
+
+    # ---------------------------------------------------------------- helpers
+    def _deadline(self, req: SimRequest) -> float:
+        slo = req.slo_ttft if req.slo_ttft is not None else self.sc.slo_ttft
+        return req.arrival + slo
+
+    def _next_candidate(self) -> _Run | None:
+        """Head of the admission queue under the configured order, or None
+        if nothing eligible (arrival <= now) is waiting. Blocking semantics
+        are the caller's: if this candidate does not fit, admission stops."""
+        if not self._pending:
+            return None
+        if self.sc.admission == "fcfs":
+            cand = self._pending[0]
+            return cand if cand.req.arrival <= self.now else None
+        best, bkey = None, None
+        for r in self._pending:
+            if r.req.arrival > self.now:
+                continue
+            key = (self._deadline(r.req), r.req.arrival, r.req.rid)
+            if best is None or key < bkey:
+                best, bkey = r, key
+        return best
+
+    def _next_arrival(self) -> float:
+        return min(r.req.arrival for r in self._pending)
+
+    def _note_kv(self, contexts) -> None:
+        """Update peak KV (allocation) and, under paging, peak waste."""
+        alloc = sum(self.cost.kv_bytes(c) for c in contexts)
+        self.res.peak_kv = max(self.res.peak_kv, alloc)
+        if self._paged:
+            exact = sum(self.cost.kv_bytes(c, exact=True) for c in contexts)
+            self.res.peak_kv_waste = max(self.res.peak_kv_waste, alloc - exact)
+
+    # ----------------------------------------------------------- static batching
+    def _step_static(self) -> list[ReqRecord]:
+        if self._batch:
+            return self._static_decode_step()
+        if not self._pending:
+            return []
+        nxt = self._next_arrival()
+        if nxt > self.now:
+            self.now = nxt
+        # form a batch: admission order up to `slots`, padded-KV projection must fit
+        batch: list[_Run] = []
+        while len(batch) < self.sc.slots:
+            cand = self._next_candidate()
+            if cand is None:
+                break
+            trial = [r.req for r in batch] + [cand.req]
             s_pad = max(r.prompt for r in trial)
             out_max = max(r.output for r in trial)
-            if len(trial) * cost.kv_bytes(s_pad + out_max) > cap and batch:
+            if len(trial) * self.cost.kv_bytes(s_pad + out_max) > self.cap and batch:
                 break  # head-of-line blocks until the current batch drains
-            batch.append(pending.popleft())
+            self._pending.remove(cand)
+            batch.append(cand)
+        if not batch:
+            return []
         B = len(batch)
-        s_pad = max(r.prompt for r in batch)
-        t_admit = t
-        t += cost.prefill_time(s_pad, ctx_end=s_pad, batch=B)
-        res.iterations += 1
-        res.peak_kv = max(res.peak_kv, B * cost.kv_bytes(s_pad))
-        gen = {}
+        s_pad = max(r.req.prompt for r in batch)
+        t_admit = self.now
+        t_iter = self.cost.prefill_time(s_pad, ctx_end=s_pad, batch=B)
+        self.now += t_iter
+        self.res.iterations += 1
+        self.res.busy_s += t_iter
+        self._note_kv([s_pad] * B)
+        done: list[ReqRecord] = []
         for r in batch:
-            rec = recs[r.rid]
-            rec.admitted = t_admit
-            rec.first_token = t
-            res.admit_order.append(r.rid)
-            gen[r.rid] = 1
-            if r.output <= 1:
-                rec.finish = t
+            r.rec.admitted = t_admit
+            r.rec.first_token = self.now
+            self.res.admit_order.append(r.req.rid)
+            r.generated = 1
+            r.cached = s_pad
+            if r.req.output <= 1:
+                r.rec.finish = self.now
+                done.append(r.rec)
+        if all(r.generated >= r.req.output for r in batch):
+            return done  # prefill-only batch; the engine goes idle
+        self._batch = batch
+        self._spad = s_pad
+        self._k = 0
+        return done
+
+    def _static_decode_step(self) -> list[ReqRecord]:
         # decode with the full padded batch until the longest request is done
-        k = 0
-        while any(gen[r.rid] < r.output for r in batch):
-            k += 1
-            t += cost.decode_step_time(B, s_pad + k)
-            res.iterations += 1
-            res.decode_steps += 1
-            kv_now = sum(
-                cost.kv_bytes(s_pad + min(k, r.output - 1)) for r in batch)
-            res.peak_kv = max(res.peak_kv, kv_now)
-            for r in batch:
-                if gen[r.rid] < r.output:
-                    gen[r.rid] += 1
-                    if gen[r.rid] >= r.output:
-                        recs[r.rid].finish = t
-            if res.iterations > _MAX_ITERATIONS:
-                raise RuntimeError("static simulation did not converge")
-    return res
+        batch = self._batch
+        B = len(batch)
+        self._k += 1
+        t_iter = self.cost.decode_step_time(B, self._spad + self._k)
+        self.now += t_iter
+        self.res.iterations += 1
+        self.res.decode_steps += 1
+        self.res.busy_s += t_iter
+        done: list[ReqRecord] = []
+        for r in batch:
+            if r.generated < r.req.output:
+                r.cached += 1  # finished members hold KV at their final context
+                r.generated += 1
+                if r.generated >= r.req.output:
+                    r.rec.finish = self.now
+                    done.append(r.rec)
+        self._note_kv([r.cached for r in batch])
+        if all(r.generated >= r.req.output for r in batch):
+            self._batch = []
+        if self.res.iterations > _MAX_ITERATIONS:
+            raise RuntimeError("static simulation did not converge")
+        return done
 
-
-# ------------------------------------------------- continuous / chunked-prefill
-def _run_continuous(ordered: list[SimRequest], cost: ServingCostModel,
-                    sc: SchedConfig, cap: float, *, chunked: bool) -> SimResult:
-    res = SimResult(sc.policy, [], [], kv_capacity=cap)
-    recs = {r.rid: ReqRecord(r.rid, r.arrival, r.prompt, r.output) for r in ordered}
-    res.records = [recs[r.rid] for r in ordered]
-    pending: deque[_Run] = deque(_Run(r, recs[r.rid]) for r in ordered)
-    running: list[_Run] = []
-    t = 0.0
-    admit_seq = 0
-
-    while pending or running:
-        if not running and pending and pending[0].req.arrival > t:
-            t = pending[0].req.arrival
-        # ---- FCFS admission into free slots (optimistic KV check) ----
+    # ------------------------------------------------- continuous / chunked-prefill
+    def _step_continuous(self) -> list[ReqRecord]:
+        cost, sc, cap = self.cost, self.sc, self.cap
+        running, pending, res = self._running, self._pending, self.res
+        chunked = sc.policy == "chunked"
+        if not running and pending:
+            nxt = self._next_arrival()
+            if nxt > self.now:
+                self.now = nxt
+        # ---- admission into free slots (optimistic KV check) ----
         kv_now = sum(cost.kv_bytes(r.cached) for r in running)
-        while pending and pending[0].req.arrival <= t and len(running) < sc.slots:
-            cand = pending[0]
+        while len(running) < sc.slots:
+            cand = self._next_candidate()
+            if cand is None:
+                break
             need = cost.kv_bytes(cand.req.prompt + cand.generated + 1)
             if kv_now + need > cap:
-                break  # FCFS: later arrivals must not jump the queue
-            pending.popleft()
+                break  # blocking: later candidates must not jump the queue
+            pending.remove(cand)
             if cand.rec.admitted < 0:
-                cand.rec.admitted = t
+                cand.rec.admitted = self.now
                 res.admit_order.append(cand.req.rid)
-            cand.admit_seq = admit_seq
-            admit_seq += 1
+            cand.admit_seq = self._admit_seq
+            self._admit_seq += 1
             running.append(cand)
             kv_now += need  # reserve the projected bytes, not the current 0
 
@@ -278,16 +423,17 @@ def _run_continuous(ordered: list[SimRequest], cost: ServingCostModel,
             res.preemptions += 1
             pending.appendleft(victim)
             projected = sum(cost.kv_bytes(c) for c in planned.values())
-        res.peak_kv = max(res.peak_kv, projected)
+        self._note_kv(list(planned.values()))
 
         # ---- price the iteration ----
         t_iter = 0.0
         if prefills and not chunked:
             # whole-prompt prefills admitted together run as ONE padded batch
-            # (what ServeEngine._admit and the static path do); non-chunked
-            # prefills always start from cached == 0
+            # (what ServeEngine._admit and the static path do); the span covers
+            # any prefix-cached context the batch resumes from
             s_pad = max(take for _, take in prefills)
-            t_iter += cost.prefill_time(s_pad, ctx_end=s_pad, batch=len(prefills))
+            ctx_end = max(r.cached + take for r, take in prefills)
+            t_iter += cost.prefill_time(s_pad, ctx_end=ctx_end, batch=len(prefills))
         else:
             for r, take in prefills:
                 # only the chunk completing the prompt produces sampled logits
@@ -299,11 +445,13 @@ def _run_continuous(ordered: list[SimRequest], cost: ServingCostModel,
             t_iter += cost.decode_step_time(len(decoders), ctx_mean)
             res.decode_steps += 1
         if t_iter == 0.0 and not pending and not running:
-            break
-        t += t_iter
+            return []
+        self.now += t_iter
         res.iterations += 1
+        res.busy_s += t_iter
 
         # ---- apply state transitions at iteration end ----
+        done: list[ReqRecord] = []
         for r in decoders:
             r.cached += 1
         for r, take in prefills:
@@ -312,10 +460,21 @@ def _run_continuous(ordered: list[SimRequest], cost: ServingCostModel,
             if r.deficit == 0 and not r.done:  # logits available -> emit token
                 r.generated += 1
                 if r.rec.first_token < 0:
-                    r.rec.first_token = t
+                    r.rec.first_token = self.now
                 if r.done:
-                    r.rec.finish = t
+                    r.rec.finish = self.now
                     running.remove(r)
+                    done.append(r.rec)
         if res.iterations > _MAX_ITERATIONS:
             raise RuntimeError("simulation did not converge (check token_budget/kv)")
-    return res
+        return done
+
+
+def simulate(requests: list[SimRequest], cost: ServingCostModel,
+             sc: SchedConfig | None = None) -> SimResult:
+    """Run one replica to completion over a whole request list."""
+    sim = ReplicaSim(cost, sc)
+    for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
+        sim.push(r)
+    sim.run()
+    return sim.res

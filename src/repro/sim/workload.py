@@ -10,14 +10,20 @@ comparable request-for-request.
 
 Trace JSONL rows: {"arrival": s, "prompt": n, "output": m} — the aliases
 "arrival_s", "prompt_tokens"/"input_tokens", "output_tokens" are accepted
-(the inference-perf trace convention). Rows without "arrival" get arrivals
-from the configured arrival process.
+(the inference-perf trace convention); optional "session" and "slo_ttft"
+keys feed affinity routing and EDF admission. Rows without "arrival" get
+arrivals from the configured arrival process.
+
+For multi-replica experiments that need *independent* per-replica streams
+(rather than one shared stream split by a router), `substreams(n)` shards
+the spec through `np.random.SeedSequence.spawn`, avoiding the correlation
+artifacts of naive `seed + i` reseeding.
 """
 
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -28,6 +34,8 @@ class SimRequest:
     arrival: float  # seconds from workload start
     prompt: int  # prompt tokens
     output: int  # tokens to generate (>= 1)
+    session: int = -1  # session/prefix-affinity key (-1 = none)
+    slo_ttft: float | None = None  # per-request TTFT deadline offset (EDF)
 
 
 @dataclass(frozen=True)
@@ -64,6 +72,8 @@ class Workload:
     burst_factor: float = 8.0
     burst_fraction: float = 0.2
     trace_path: str | None = None
+    num_sessions: int = 0  # >0: assign each request a session id in [0, n)
+    slo_ttft: float | tuple | None = None  # scalar, or tuple sampled per request
 
     # ------------------------------------------------------------- generation
     def generate(self) -> list[SimRequest]:
@@ -74,9 +84,43 @@ class Workload:
         arrivals = np.cumsum(gaps)
         prompts = self.prompt.sample(rng, self.num_requests)
         outputs = self.output.sample(rng, self.num_requests)
+        # optional draws come last so specs without them keep the exact
+        # request streams earlier PRs generated
+        sessions = (rng.integers(0, self.num_sessions, size=self.num_requests)
+                    if self.num_sessions > 0 else None)
+        slos = self._sample_slos(rng, self.num_requests)
         return [
-            SimRequest(i, float(arrivals[i]), int(prompts[i]), max(int(outputs[i]), 1))
+            SimRequest(i, float(arrivals[i]), int(prompts[i]), max(int(outputs[i]), 1),
+                       session=int(sessions[i]) if sessions is not None else -1,
+                       slo_ttft=slos[i])
             for i in range(self.num_requests)
+        ]
+
+    def _sample_slos(self, rng: np.random.Generator, n: int) -> list:
+        if self.slo_ttft is None:
+            return [None] * n
+        if isinstance(self.slo_ttft, (int, float)):
+            return [float(self.slo_ttft)] * n
+        choices = [float(x) for x in self.slo_ttft]
+        return [choices[i] for i in rng.integers(0, len(choices), size=n)]
+
+    def substreams(self, n: int) -> list["Workload"]:
+        """Shard into `n` decorrelated sub-workloads (1/n of the rate and
+        request count each) via `SeedSequence.spawn` — the spawned child
+        seeds are statistically independent, unlike `seed + i` reseeding
+        which correlates the low bits of neighbouring streams."""
+        if n < 1:
+            raise ValueError("substreams needs n >= 1")
+        if self.trace_path is not None:
+            raise ValueError("substreams applies to synthetic specs, not traces")
+        children = np.random.SeedSequence(self.seed).spawn(n)
+        counts = [self.num_requests // n + (1 if i < self.num_requests % n else 0)
+                  for i in range(n)]
+        return [
+            replace(self, name=f"{self.name}[{i}/{n}]", qps=self.qps / n,
+                    num_requests=counts[i],
+                    seed=int(children[i].generate_state(1)[0]))
+            for i in range(n)
         ]
 
     def _gaps(self, rng: np.random.Generator, n: int) -> np.ndarray:
@@ -116,8 +160,13 @@ class Workload:
             output = row.get("output", row.get("output_tokens"))
             if prompt is None or output is None:
                 raise ValueError(f"trace row {i} missing prompt/output tokens: {row}")
+            slo = row.get("slo_ttft")
+            if slo is None and isinstance(self.slo_ttft, (int, float)):
+                slo = float(self.slo_ttft)
             reqs.append(SimRequest(i, float(arrival), max(int(prompt), 1),
-                                   max(int(output), 1)))
+                                   max(int(output), 1),
+                                   session=int(row.get("session", -1)),
+                                   slo_ttft=slo))
         reqs.sort(key=lambda r: (r.arrival, r.rid))
         return reqs
 

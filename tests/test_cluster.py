@@ -1,0 +1,272 @@
+"""repro.cluster: single-replica parity with `repro.sim.simulate`, request
+conservation across replicas/pools under preemption, router determinism,
+disaggregated KV-transfer pricing, and the capacity planner."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import comm as C
+from repro.core.hardware import H100_SXM
+from repro.sim import (
+    LengthDist,
+    ReplicaSim,
+    SchedConfig,
+    ServingCostModel,
+    SimRequest,
+    Workload,
+    simulate,
+)
+from repro.cluster import (
+    ClusterSpec,
+    ReplicaSpec,
+    make_router,
+    plan_capacity,
+    pool_summaries,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+CFG = get_config("qwen3_14b")
+
+
+def _wl(**kw):
+    base = dict(
+        qps=50.0, num_requests=24, arrival="poisson",
+        prompt=LengthDist("lognormal", 96, 0.4, lo=8, hi=512),
+        output=LengthDist("lognormal", 24, 0.4, lo=2, hi=128), seed=0,
+    )
+    base.update(kw)
+    return Workload(**base)
+
+
+def _spec(pools, *, sched=None, router="jsq", hw="h100", **kw):
+    sched = sched or SchedConfig(slots=8)
+    return ClusterSpec(
+        replicas=tuple(ReplicaSpec(hw=hw, pool=p, sched=sched, ctx_quantum=32)
+                       for p in pools),
+        router=router, **kw)
+
+
+# ------------------------------------------------------- single-replica parity
+@pytest.mark.parametrize("policy", ["static", "continuous", "chunked"])
+def test_single_replica_cluster_matches_simulate(policy):
+    reqs = _wl().generate()
+    sc = SchedConfig(policy=policy, slots=8)
+    direct = simulate(reqs, ServingCostModel(CFG, H100_SXM, ctx_quantum=32), sc)
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"], sched=sc))
+    assert cres.mode == "colocated"
+    [rep] = cres.replica_results
+    assert rep.iterations == direct.iterations
+    assert rep.decode_steps == direct.decode_steps
+    assert rep.peak_kv == direct.peak_kv
+    assert rep.admit_order == direct.admit_order
+    got = sorted(cres.records, key=lambda r: r.rid)
+    want = sorted(direct.records, key=lambda r: r.rid)
+    for a, b in zip(got, want):
+        assert (a.admitted, a.first_token, a.finish) == \
+            (b.admitted, b.first_token, b.finish)
+
+
+# ------------------------------------------------------------- conservation
+@pytest.mark.parametrize("pools", [
+    ["mixed"] * 3,
+    ["prefill", "decode", "decode"],
+    ["prefill", "prefill", "decode"],
+])
+def test_cluster_request_conservation_under_pressure(pools):
+    # KV budgets tight enough to force queueing/preemption on the serving
+    # pools; every request must still finish exactly once, in causal order
+    reqs = _wl(num_requests=20, qps=200.0).generate()
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+    cap = 3.0 * max(cost.kv_bytes(r.prompt + r.output) for r in reqs)
+    sc = SchedConfig(slots=8, kv_capacity=cap)
+    cres = simulate_cluster(reqs, CFG, _spec(pools, sched=sc))
+    assert sorted(r.rid for r in cres.records) == list(range(20))
+    for r in cres.records:
+        assert r.finish >= r.first_token >= r.arrival
+        assert r.admitted >= r.arrival
+    for rep in cres.replica_results:
+        assert rep.peak_kv <= rep.kv_capacity
+    # every request was assigned, and stage records cover every rid once
+    assert set(cres.assignments) == set(range(20))
+    staged = sorted(rec.rid for rep in cres.replica_results
+                    for rec in rep.records if rec.prompt > 0)
+    if cres.mode == "colocated":
+        assert staged == list(range(20))
+
+
+def test_preemption_exercised_in_cluster():
+    reqs = _wl(num_requests=20, qps=500.0,
+               prompt=LengthDist("lognormal", 128, 0.5, lo=16, hi=512),
+               output=LengthDist("lognormal", 64, 0.5, lo=8, hi=256)).generate()
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+    cap = 2.5 * max(cost.kv_bytes(r.prompt + r.output) for r in reqs)
+    sc = SchedConfig(slots=8, kv_capacity=cap)
+    cres = simulate_cluster(reqs, CFG, _spec(["prefill", "decode"], sched=sc))
+    assert sum(r.preemptions for r in cres.replica_results) > 0
+    assert sorted(r.rid for r in cres.records) == list(range(20))
+    assert all(r.finish >= r.first_token >= r.arrival for r in cres.records)
+
+
+# ------------------------------------------------------------------- routing
+def test_router_determinism_under_fixed_seed():
+    reqs = _wl(num_requests=32, num_sessions=4).generate()
+    for router in ("round_robin", "jsq", "least_kv", "affinity"):
+        a = simulate_cluster(reqs, CFG, _spec(["mixed"] * 3, router=router))
+        b = simulate_cluster(reqs, CFG, _spec(["mixed"] * 3, router=router))
+        assert a.assignments == b.assignments
+        assert [(r.first_token, r.finish) for r in a.records] == \
+            [(r.first_token, r.finish) for r in b.records]
+
+
+def test_round_robin_cycles():
+    reqs = [SimRequest(i, float(i), 32, 2) for i in range(8)]
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"] * 4, router="round_robin"))
+    assert [cres.assignments[i][0] for i in range(8)] == [0, 1, 2, 3, 0, 1, 2, 3]
+
+
+def test_jsq_spreads_simultaneous_arrivals():
+    reqs = [SimRequest(i, 0.0, 64, 4) for i in range(4)]
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"] * 4, router="jsq"))
+    assert sorted(cres.assignments[i][0] for i in range(4)) == [0, 1, 2, 3]
+
+
+def test_affinity_pins_sessions_and_discounts_prefill():
+    # same session keeps landing on its home replica and prefill gets cheaper
+    reqs = [SimRequest(i, float(i) * 0.001, 256, 2, session=i % 2)
+            for i in range(10)]
+    cres = simulate_cluster(
+        reqs, CFG, _spec(["mixed"] * 2, router="affinity", hit_frac=0.5))
+    homes = {s: {cres.assignments[r.rid][0] for r in reqs if r.session == s}
+             for s in (0, 1)}
+    assert all(len(h) == 1 for h in homes.values())
+    assert cres.prefix_hits == 8  # all but the first request of each session
+    # the modeled discount: a prefix-cached push prefills only the suffix
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=1)
+    cold = ReplicaSim(cost, SchedConfig(slots=1))
+    cold.push(SimRequest(0, 0.0, 256, 2))
+    warm = ReplicaSim(cost, SchedConfig(slots=1))
+    warm.push(SimRequest(0, 0.0, 256, 2), cached=128)
+    cold.run(), warm.run()
+    assert warm.res.records[0].ttft < cold.res.records[0].ttft
+
+
+# ------------------------------------------------------ disaggregated pricing
+def test_disagg_prices_nonzero_p2p_transfer():
+    reqs = _wl(num_requests=16, qps=20.0).generate()
+    spec = _spec(["prefill", "decode"])
+    cres = simulate_cluster(reqs, CFG, spec)
+    multi = [r for r in reqs if r.output > 1]
+    assert cres.xfer_count == len(multi)
+    assert cres.xfer_seconds > 0
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+    net = cost.hw.net[-1]
+    want_bytes = sum(cost.kv_handoff_bytes(r.prompt) for r in multi)
+    assert cres.xfer_bytes == pytest.approx(want_bytes)
+    assert cres.xfer_seconds == pytest.approx(
+        sum(C.p2p(cost.kv_handoff_bytes(r.prompt), net) for r in multi))
+    s = summarize_cluster(cres, slo_ttft=2.0, slo_tpot=0.05)
+    assert s["xfer_share"] > 0
+    pools = pool_summaries(cres)
+    assert set(pools) == {"prefill", "decode"}
+    assert pools["prefill"]["requests"] == 16  # every request prefills once
+    assert pools["decode"]["requests"] == len(multi)
+
+
+def test_disagg_transfer_gap_appears_between_first_and_second_token():
+    # one request, one replica per pool: the decode stage cannot begin
+    # before prefill finish + the p2p transfer time
+    req = SimRequest(0, 0.0, 512, 8)
+    cres = simulate_cluster([req], CFG, _spec(["prefill", "decode"]))
+    [rec] = cres.records
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+    dt = C.p2p(cost.kv_handoff_bytes(512), cost.hw.net[-1])
+    decode_rec = cres.replica_results[1].records[0]
+    assert decode_rec.arrival == pytest.approx(rec.first_token + dt)
+    assert rec.finish > rec.first_token + dt
+
+
+def test_heterogeneous_replicas_prefer_faster_hardware_equally_loaded():
+    # an H100 replica drains faster than an A100 one, so JSQ sends it more
+    reqs = _wl(num_requests=32, qps=100.0).generate()
+    spec = ClusterSpec(replicas=(
+        ReplicaSpec(hw="a100", pool="mixed", sched=SchedConfig(slots=8),
+                    ctx_quantum=32),
+        ReplicaSpec(hw="h100", pool="mixed", sched=SchedConfig(slots=8),
+                    ctx_quantum=32),
+    ))
+    cres = simulate_cluster(reqs, CFG, spec)
+    counts = [0, 0]
+    for i, _ in cres.assignments.values():
+        counts[i] += 1
+    assert counts[1] > counts[0]
+
+
+# ---------------------------------------------------------------- validation
+def test_static_replicas_reject_midstream_entry():
+    # static batching can't resume from cached state: the push fails fast
+    # and the cluster combinations that require it are refused up front
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+    sim = ReplicaSim(cost, SchedConfig(policy="static"))
+    with pytest.raises(ValueError, match="mid-stream"):
+        sim.push(SimRequest(0, 0.0, 64, 4), cached=32)
+    static = SchedConfig(policy="static", slots=8)
+    with pytest.raises(ValueError, match="handoff"):
+        simulate_cluster([], CFG, _spec(["prefill", "decode"], sched=static))
+    with pytest.raises(ValueError, match="affinity"):
+        simulate_cluster([], CFG,
+                         _spec(["mixed"] * 2, sched=static, router="affinity"))
+    # static colocated without prefix discounts remains supported
+    reqs = _wl(num_requests=8).generate()
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"] * 2, sched=static))
+    assert sorted(r.rid for r in cres.records) == list(range(8))
+
+
+def test_cluster_pool_validation():
+    with pytest.raises(ValueError, match="decode"):
+        simulate_cluster([], CFG, _spec(["prefill", "prefill"]))
+    with pytest.raises(ValueError, match="mixed"):
+        simulate_cluster([], CFG, _spec(["mixed", "prefill", "decode"]))
+    with pytest.raises(ValueError, match="at least one replica"):
+        simulate_cluster([], CFG, ClusterSpec(replicas=()))
+    with pytest.raises(ValueError, match="unknown router"):
+        make_router("random")
+
+
+# ------------------------------------------------------------------- planner
+def test_planner_honors_sched_config():
+    # the sweep must price the scheduler it was asked to plan for: one slot
+    # per replica serializes requests, so attainment collapses vs 8 slots
+    wl = _wl(num_requests=16)
+    kw = dict(qps=16.0, slo_ttft=1.0, slo_tpot=0.05, attainment=0.95,
+              max_replicas=1, modes=("colocated",), ctx_quantum=32)
+    wide = plan_capacity(CFG, wl, sched=SchedConfig(slots=8), **kw)
+    narrow = plan_capacity(CFG, wl, sched=SchedConfig(slots=1), **kw)
+    assert narrow["rows"][0]["goodput_frac"] < wide["rows"][0]["goodput_frac"]
+
+
+def test_capacity_planner_finds_cheapest_feasible():
+    wl = _wl(num_requests=24)
+    plan = plan_capacity(
+        CFG, wl, qps=8.0, slo_ttft=5.0, slo_tpot=0.05, attainment=0.9,
+        max_replicas=3, modes=("colocated",), ctx_quantum=32,
+        sched=SchedConfig(slots=8))
+    assert plan["best"] is not None
+    best = plan["best"]
+    assert best["feasible"] and best["goodput_frac"] >= 0.9
+    # cheapest means no feasible row is cheaper
+    for r in plan["rows"]:
+        if r["feasible"]:
+            assert best["cost_per_hr"] <= r["cost_per_hr"]
+    # cost scales with replica count x tp x $/dev-hr
+    one = next(r for r in plan["rows"] if r["replicas"] == 1)
+    assert one["cost_per_hr"] == pytest.approx(3.9)
+
+
+def test_capacity_planner_reports_infeasible_when_slo_impossible():
+    wl = _wl(num_requests=12)
+    plan = plan_capacity(
+        CFG, wl, qps=50.0, slo_ttft=1e-6, slo_tpot=1e-9, attainment=0.99,
+        max_replicas=2, modes=("colocated",), ctx_quantum=32)
+    assert plan["best"] is None
+    assert all(not r["feasible"] for r in plan["rows"])
