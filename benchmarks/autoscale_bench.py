@@ -1,0 +1,94 @@
+"""Autoscaling suite: dynamic fleet vs static peak provisioning on a
+diurnal trace, the rate vs slo_debt policies, load shedding under a
+burst, and the pinned-bounds parity contract with the static cluster.
+Rows follow the harness convention (name, us_per_call, derived)."""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.sim import LengthDist, SchedConfig, Workload
+from repro.cluster import (
+    AutoscaleConfig,
+    ClusterSpec,
+    ReplicaSpec,
+    provisioning_summary,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+SLO = dict(slo_ttft=2.0, slo_tpot=0.05)
+
+
+def _spec(n, slots=8, **kw):
+    return ClusterSpec(replicas=tuple(
+        ReplicaSpec(pool="mixed", sched=SchedConfig(slots=slots),
+                    ctx_quantum=32) for _ in range(n)), **kw)
+
+
+def bench_autoscale():
+    cfg = get_config("qwen3_14b")
+    wl = Workload(
+        name="diurnal-smoke", qps=24.0, num_requests=360, arrival="diurnal",
+        diurnal_period=30.0, diurnal_amp=0.9,
+        prompt=LengthDist("lognormal", 256, 0.4, lo=16, hi=2048),
+        output=LengthDist("lognormal", 64, 0.4, lo=4, hi=512), seed=0,
+    )
+    reqs = wl.generate()
+    cache: dict = {}
+    rows = []
+
+    # static peak fleet vs the autoscaled fleet on the same diurnal stream
+    peak = simulate_cluster(reqs, cfg, _spec(5), _cost_cache=cache)
+    s_peak = summarize_cluster(peak, **SLO)
+    for policy in ("rate", "slo_debt"):
+        asc = AutoscaleConfig(policy=policy, min_replicas=1, max_replicas=5,
+                              interval=1.0, window=4.0,
+                              target_qps_per_replica=8.0, slo_ttft=2.0,
+                              warmup=1.0)
+        cres = simulate_cluster(reqs, cfg, _spec(2), autoscale=asc,
+                                _cost_cache=cache)
+        s = summarize_cluster(cres, **SLO)
+        prov = provisioning_summary(cres)
+        rows.append((
+            f"autoscale/{policy}-diurnal",
+            s["e2e_p50"] * 1e6,
+            f"goodput={s['goodput_frac']:.2f}"
+            f";peak_repl={s['peak_replicas']}"
+            f";repl_s={prov['replica_hours'] * 3600:.0f}"
+            f";static_repl_s={prov['replica_hours_static_peak'] * 3600:.0f}"
+            f";saved={prov['savings_frac']:.2f}"
+            f";events={s['scale_events']}",
+        ))
+    rows.append((
+        "autoscale/static-peak-5r",
+        s_peak["e2e_p50"] * 1e6,
+        f"goodput={s_peak['goodput_frac']:.2f}"
+        f";repl_s={peak.replica_hours * 3600:.0f}",
+    ))
+
+    # load shedding bounds queueing when the fleet cannot grow
+    shed_spec = _spec(2, shed_depth=12, retry_after=0.25, max_retries=2)
+    cres = simulate_cluster(reqs, cfg, shed_spec, _cost_cache=cache)
+    s = summarize_cluster(cres, **SLO)
+    rows.append((
+        "autoscale/shed-2r",
+        s["e2e_p50"] * 1e6,
+        f"shed={s['shed']};shed_frac={s['shed_frac']:.2f}"
+        f";retries={s['retries']};goodput={s['goodput_frac']:.2f}",
+    ))
+
+    # pinned bounds must reproduce the static cluster exactly
+    pin = AutoscaleConfig(min_replicas=3, max_replicas=3, interval=1.0)
+    a = simulate_cluster(reqs, cfg, _spec(3), _cost_cache=cache)
+    b = simulate_cluster(reqs, cfg, _spec(3), autoscale=pin, _cost_cache=cache)
+    exact = all(
+        (x.admitted, x.first_token, x.finish)
+        == (y.admitted, y.first_token, y.finish)
+        for x, y in zip(sorted(a.records, key=lambda r: r.rid),
+                        sorted(b.records, key=lambda r: r.rid)))
+    rows.append((
+        "autoscale/pinned_bounds_parity",
+        a.makespan * 1e6,
+        f"exact={exact}",
+    ))
+    return rows

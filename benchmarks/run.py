@@ -9,6 +9,7 @@ import time
 
 
 def main() -> None:
+    from benchmarks.autoscale_bench import bench_autoscale
     from benchmarks.cluster_bench import bench_cluster
     from benchmarks.kernels_bench import bench_kernels
     from benchmarks.paper_tables import ALL
@@ -20,6 +21,7 @@ def main() -> None:
     suites["kernels"] = bench_kernels
     suites["serving"] = bench_serving
     suites["cluster"] = bench_cluster
+    suites["autoscale"] = bench_autoscale
 
     wanted = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -1,15 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the full pytest suite plus fast serving/cluster
 # simulation smokes (sub-minute on CPU after the test suite). Run from anywhere.
+#
+# The fast analytical tier (what CI runs on every push) is:
+#     pytest -m "not slow"        # <60s: everything but JAX compile-heavy tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
-python -m benchmarks.run serving cluster
+python -m pytest -x -q --durations=15
+python -m benchmarks.run serving cluster autoscale
 
 # CLI smokes: tiny workloads, both entry points must run end-to-end
 python -m repro.sim --config qwen3_14b --hw h100 --qps 16 --requests 12 \
     --slots 4 --sweep '' --ctx-quantum 32
 python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 16 \
     --requests 12 --slots 4 --ctx-quantum 32
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 24 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode colocated \
+    --arrival diurnal --diurnal-period 20 --autoscale --max-replicas 3 \
+    --scale-interval 1 --target-qps 12

@@ -14,7 +14,13 @@ actually planned against:
     heterogeneous per-replica hardware and scheduler configs.
   * `planner` — SLO-driven capacity planning: sweep replica count / pool
     split at a target QPS, price candidates in $/hr, return the cheapest
-    plan whose SLO attainment clears the bar.
+    plan whose SLO attainment clears the bar; `provisioning_summary`
+    prices a dynamic fleet's replica-hours against static peak
+    provisioning.
+  * `autoscale` — target-tracking replica add/remove (arrival rate or
+    rolling SLO debt) with weight-load warmup, graceful drain, and
+    min/max bounds, driving `simulate_cluster(..., autoscale=)` under
+    diurnal/bursty traces.
 
 CLI:
 
@@ -26,6 +32,11 @@ disaggregated organizations of the same fleet; `--plan` runs the capacity
 sweep instead. `python -m benchmarks.run cluster` emits CSV rows.
 """
 
+from repro.cluster.autoscale import (
+    AUTOSCALE_POLICIES,
+    AutoscaleConfig,
+    Autoscaler,
+)
 from repro.cluster.cluster import (
     POOLS,
     ClusterResult,
@@ -39,11 +50,15 @@ from repro.cluster.planner import (
     DEFAULT_PRICE_PER_DEV_HR,
     cluster_price_per_hr,
     plan_capacity,
+    provisioning_summary,
     replica_price_per_hr,
 )
 from repro.cluster.router import ROUTERS, ReplicaView, Router, make_router
 
 __all__ = [
+    "AUTOSCALE_POLICIES",
+    "AutoscaleConfig",
+    "Autoscaler",
     "ClusterResult",
     "ClusterSpec",
     "DEFAULT_PRICE_PER_DEV_HR",
@@ -56,6 +71,7 @@ __all__ = [
     "make_router",
     "plan_capacity",
     "pool_summaries",
+    "provisioning_summary",
     "replica_price_per_hr",
     "simulate_cluster",
     "summarize_cluster",

@@ -8,7 +8,10 @@ disaggregated prefill/decode cluster, printing cluster- and pool-level
 TTFT/TPOT/goodput/SLO-attainment plus the KV-transfer overhead of the
 disaggregated organization. `--hw` accepts a comma-separated list cycled
 across replicas for heterogeneous fleets; `--plan` runs the SLO-driven
-capacity sweep instead of a fixed-size comparison.
+capacity sweep instead of a fixed-size comparison; `--autoscale` makes
+the fleet dynamic (target-tracking replica add/remove with warmup and
+graceful drain — pair with `--arrival diurnal` and `--max-replicas`),
+reporting replica-hours against static peak provisioning.
 """
 
 from __future__ import annotations
@@ -18,12 +21,15 @@ import argparse
 from repro.configs import get_config
 from repro.sim import ADMISSIONS, LengthDist, SchedConfig, Workload
 from repro.cluster import (
+    AUTOSCALE_POLICIES,
     ROUTERS,
+    AutoscaleConfig,
     ClusterSpec,
     ReplicaSpec,
     cluster_price_per_hr,
     plan_capacity,
     pool_summaries,
+    provisioning_summary,
     simulate_cluster,
     summarize_cluster,
 )
@@ -56,7 +62,14 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--qps", type=float, default=32.0)
     p.add_argument("--requests", type=int, default=200)
     p.add_argument("--arrival", default="poisson",
-                   choices=["constant", "poisson", "bursty"])
+                   choices=["constant", "poisson", "bursty", "diurnal",
+                            "envelope"])
+    p.add_argument("--diurnal-period", type=float, default=240.0,
+                   help="seconds per compressed day (--arrival diurnal)")
+    p.add_argument("--diurnal-amp", type=float, default=0.8,
+                   help="relative rate swing in [0, 1] (--arrival diurnal)")
+    p.add_argument("--rate-path", default=None,
+                   help="JSONL rate envelope {t, qps} (--arrival envelope)")
     p.add_argument("--prompt-dist", default="lognormal", choices=["fixed", "lognormal"])
     p.add_argument("--prompt-mean", type=float, default=512)
     p.add_argument("--prompt-sigma", type=float, default=0.4)
@@ -74,6 +87,25 @@ def build_parser() -> argparse.ArgumentParser:
                    help="run the SLO-driven capacity sweep instead")
     p.add_argument("--plan-max-replicas", type=int, default=6)
     p.add_argument("--attainment", type=float, default=0.95)
+    # dynamic fleet
+    p.add_argument("--autoscale", action="store_true",
+                   help="scale the fleet at runtime (--replicas = t=0 fleet)")
+    p.add_argument("--autoscale-policy", default="rate",
+                   choices=list(AUTOSCALE_POLICIES))
+    p.add_argument("--min-replicas", type=int, default=1)
+    p.add_argument("--max-replicas", type=int, default=8)
+    p.add_argument("--scale-interval", type=float, default=5.0,
+                   help="control-loop period (s)")
+    p.add_argument("--scale-window", type=float, default=15.0,
+                   help="rolling observation window (s)")
+    p.add_argument("--target-qps", type=float, default=8.0,
+                   help="rate policy: target qps per replica")
+    p.add_argument("--warmup", type=float, default=None,
+                   help="replica warmup (s); default prices weight loading")
+    p.add_argument("--shed-depth", type=int, default=None,
+                   help="shed arrivals when every replica's depth >= this")
+    p.add_argument("--retry-after", type=float, default=0.5)
+    p.add_argument("--max-retries", type=int, default=2)
     return p
 
 
@@ -105,14 +137,27 @@ def main(argv=None) -> None:
         arrival=args.arrival,
         prompt=LengthDist(args.prompt_dist, args.prompt_mean, args.prompt_sigma),
         output=LengthDist(args.output_dist, args.output_mean, args.output_sigma),
-        seed=args.seed, trace_path=args.trace, num_sessions=args.sessions)
+        seed=args.seed, trace_path=args.trace, num_sessions=args.sessions,
+        diurnal_period=args.diurnal_period, diurnal_amp=args.diurnal_amp,
+        rate_path=args.rate_path)
     reqs = wl.generate()
+    autoscale = None
+    if args.autoscale:
+        autoscale = AutoscaleConfig(
+            policy=args.autoscale_policy, min_replicas=args.min_replicas,
+            max_replicas=args.max_replicas, interval=args.scale_interval,
+            window=args.scale_window, target_qps_per_replica=args.target_qps,
+            slo_ttft=args.slo_ttft, warmup=args.warmup)
 
     if args.plan:
         hws = [h.strip() for h in args.hw.split(",") if h.strip()]
         if len(hws) > 1:
             print(f"# note: --plan sweeps homogeneous fleets; using {hws[0]!r} "
                   f"(ignoring {', '.join(hws[1:])})")
+        if args.autoscale or args.shed_depth is not None:
+            print("# note: --plan sizes STATIC fleets; --autoscale/--shed-* "
+                  "flags are ignored by the sweep (drop --plan to run the "
+                  "dynamic fleet)")
         sched = SchedConfig(policy=args.policy, slots=args.slots,
                             token_budget=args.token_budget,
                             admission=args.admission, slo_ttft=args.slo_ttft)
@@ -178,9 +223,13 @@ def main(argv=None) -> None:
             pools = ["mixed"] * n
         spec = ClusterSpec(replicas=_replicas(args, n, pools),
                            router=args.router, decode_router=args.decode_router,
-                           hit_frac=args.hit_frac)
+                           hit_frac=args.hit_frac,
+                           router_slo_ttft=args.slo_ttft,
+                           shed_depth=args.shed_depth,
+                           retry_after=args.retry_after,
+                           max_retries=args.max_retries)
         try:
-            cres = simulate_cluster(reqs, cfg, spec)
+            cres = simulate_cluster(reqs, cfg, spec, autoscale=autoscale)
         except ValueError as e:
             print(f"{mode:<14} (skipped: {e})")
             continue
@@ -190,7 +239,14 @@ def main(argv=None) -> None:
         print(_fmt_row(label, s))
 
     for mode, (spec, cres, s) in results.items():
-        print(f"\n# {mode}: ${cluster_price_per_hr(spec):.2f}/hr, "
+        if args.autoscale:
+            # a dynamic fleet has no single $/hr: bill the actual spans
+            prov = provisioning_summary(cres)
+            hours = max(cres.makespan / 3600.0, 1e-12)
+            price = f"${prov['cost_usd'] / hours:.2f}/hr avg (dynamic)"
+        else:
+            price = f"${cluster_price_per_hr(spec):.2f}/hr"
+        print(f"\n# {mode}: {price}, "
               f"preemptions={s['preemptions']}, "
               f"util=[{', '.join(f'{u:.0%}' for u in s['replica_util'])}]"
               + (f", kv-transfer: {s['xfer_count']} moves, {s['xfer_gb']:.2f} GB, "
@@ -198,7 +254,24 @@ def main(argv=None) -> None:
                  f"{s['xfer_share']:.2%} of e2e"
                  if cres.mode == "disaggregated" else "")
               + (f", prefix_hits={s['prefix_hits']}"
-                 if args.router == "affinity" else ""))
+                 if args.router == "affinity" else "")
+              + (f", shed={s['shed']} ({s['shed_frac']:.1%}), "
+                 f"retries={s['retries']}"
+                 if args.shed_depth is not None else ""))
+        if args.autoscale:
+            print(f"  autoscale [{args.autoscale_policy}]: "
+                  f"{s['scale_events']} scale events, "
+                  f"peak {s['peak_replicas']} replicas, "
+                  f"{prov['replica_hours'] * 3600:.1f} replica-s vs "
+                  f"{prov['replica_hours_static_peak'] * 3600:.1f} static-peak "
+                  f"(${prov['cost_usd']:.4f} vs "
+                  f"${prov['cost_usd_static_peak']:.4f}, "
+                  f"{prov['savings_frac']:.0%} saved)")
+            for ev in cres.scale_events:
+                print(f"    t={ev['t']:7.2f}s {ev['action']:<7} "
+                      f"r{ev['replica']} [{ev['pool']}]"
+                      + (f" ready t={ev['ready']:.2f}s"
+                         if ev["action"] == "add" else ""))
         for pool, ps in pool_summaries(cres, slo_ttft=args.slo_ttft,
                                        slo_tpot=args.slo_tpot).items():
             print(f"  pool {pool:<8} x{ps['replicas']}: "

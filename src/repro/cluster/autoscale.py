@@ -1,0 +1,155 @@
+"""Target-tracking autoscaling policies for the dynamic cluster simulator.
+
+An `Autoscaler` is the control loop of `simulate_cluster(..., autoscale=)`:
+every `interval` seconds it observes the recent past through a rolling
+window and returns the replica count the fleet should converge to.
+
+Two signals:
+
+  * `rate`     — track the observed arrival rate: desired replicas =
+                 ceil(rate / target_qps_per_replica), the classic
+                 requests-per-replica target-tracking policy.
+  * `slo_debt` — track the rolling TTFT-violation fraction of completed
+                 requests: scale up while debt exceeds `debt_hi`, scale
+                 down (one replica per tick) once it falls under
+                 `debt_lo`. Reactive, workload-shape-agnostic, but pays
+                 the debt before correcting it.
+
+Scale-up is not free: a replica spends `warmup` seconds loading weights
+before it can accept traffic. When `warmup` is None it is priced from the
+serving cost model — per-device resident weight bytes over the host
+weight-load link (`host_bw`) — so bigger models genuinely take longer to
+join, which is exactly the lag that makes diurnal provisioning hard.
+Scale-down is graceful: the cluster engine first cancels replicas still
+warming, then drains live ones (no new admissions, in-flight work runs
+out) — see `repro.cluster.cluster`.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+
+from repro.sim.costmodel import ServingCostModel
+
+AUTOSCALE_POLICIES = ("rate", "slo_debt")
+
+# PCIe gen5 x16 ballpark: the host-to-device link each device's weight
+# shard streams over while a replica warms up
+DEFAULT_HOST_BW = 64e9
+
+
+class RollingFlagWindow:
+    """(timestamp, flag) observations over a trailing time window; the one
+    rolling-violation-fraction implementation shared by the autoscaler's
+    SLO-debt signal and the `slo_debt` router (so their window semantics
+    cannot drift apart)."""
+
+    def __init__(self, window: float):
+        if window <= 0:
+            raise ValueError("window must be positive")
+        self.window = float(window)
+        self._q: deque[tuple[float, bool]] = deque()
+
+    def add(self, t: float, flag: bool) -> None:
+        self._q.append((t, bool(flag)))
+
+    def frac(self, now: float) -> float:
+        """Fraction of set flags among observations in [now - window, now]
+        (0 when the window is empty)."""
+        q = self._q
+        horizon = now - self.window
+        while q and q[0][0] < horizon:
+            q.popleft()
+        if not q:
+            return 0.0
+        return sum(1 for _, f in q if f) / len(q)
+
+
+@dataclass(frozen=True)
+class AutoscaleConfig:
+    policy: str = "rate"  # rate | slo_debt
+    min_replicas: int = 1
+    max_replicas: int = 8
+    interval: float = 5.0  # control-loop period (s)
+    window: float = 15.0  # rolling observation window (s)
+    target_qps_per_replica: float = 8.0  # rate policy setpoint
+    slo_ttft: float = 2.0  # TTFT deadline the debt signal scores against
+    debt_hi: float = 0.10  # scale up while violation fraction exceeds this
+    debt_lo: float = 0.02  # scale down once it falls below this
+    warmup: float | None = None  # s; None -> weight bytes over host_bw
+    host_bw: float = DEFAULT_HOST_BW  # bytes/s per device for weight loading
+
+    def validate(self) -> None:
+        if self.policy not in AUTOSCALE_POLICIES:
+            raise ValueError(f"unknown autoscale policy {self.policy!r}; "
+                             f"choose from {AUTOSCALE_POLICIES}")
+        if not 1 <= self.min_replicas <= self.max_replicas:
+            raise ValueError("need 1 <= min_replicas <= max_replicas")
+        if self.interval <= 0 or self.window <= 0:
+            raise ValueError("interval and window must be positive")
+        if self.target_qps_per_replica <= 0:
+            raise ValueError("target_qps_per_replica must be positive")
+        if not 0.0 <= self.debt_lo <= self.debt_hi <= 1.0:
+            raise ValueError("need 0 <= debt_lo <= debt_hi <= 1")
+        if self.warmup is not None and self.warmup < 0:
+            raise ValueError("warmup must be >= 0")
+        if self.host_bw <= 0:
+            raise ValueError("host_bw must be positive")
+
+    def warmup_seconds(self, cost: ServingCostModel) -> float:
+        """Replica activation delay: explicit override, or the time to
+        stream each device's resident weight shard over the host link
+        (shards load in parallel across the replica's devices)."""
+        if self.warmup is not None:
+            return self.warmup
+        return cost.weight_bytes / self.host_bw
+
+
+class Autoscaler:
+    """Rolling-window signal tracker + desired-count policy. The cluster
+    engine feeds it arrivals and completed-request TTFTs; `desired()` is
+    evaluated at each control tick and clamped to [min, max]."""
+
+    def __init__(self, asc: AutoscaleConfig):
+        asc.validate()
+        self.asc = asc
+        self._arrivals: deque[float] = deque()
+        self._debt = RollingFlagWindow(asc.window)
+
+    # ------------------------------------------------------------ observation
+    def observe_arrival(self, t: float) -> None:
+        self._arrivals.append(t)
+
+    def observe_ttft(self, t: float, ttft: float) -> None:
+        self._debt.add(t, ttft > self.asc.slo_ttft)
+
+    def observed_rate(self, now: float) -> float:
+        """Arrival rate over the (possibly still-filling) window."""
+        horizon = now - self.asc.window
+        while self._arrivals and self._arrivals[0] < horizon:
+            self._arrivals.popleft()
+        denom = max(min(now, self.asc.window), 1e-9)
+        return len(self._arrivals) / denom
+
+    def slo_debt(self, now: float) -> float:
+        """Rolling TTFT-violation fraction (0 with no completions yet)."""
+        return self._debt.frac(now)
+
+    # ---------------------------------------------------------------- policy
+    def desired(self, now: float, provisioned: int) -> int:
+        """Replica count to converge to, given `provisioned` replicas
+        currently active or warming (draining ones are already gone)."""
+        if self.asc.policy == "rate":
+            want = math.ceil(self.observed_rate(now)
+                             / self.asc.target_qps_per_replica)
+        else:  # slo_debt
+            debt = self.slo_debt(now)
+            if debt > self.asc.debt_hi:
+                want = provisioned + 1
+            elif debt < self.asc.debt_lo:
+                want = provisioned - 1
+            else:
+                want = provisioned
+        return max(self.asc.min_replicas, min(self.asc.max_replicas, want))

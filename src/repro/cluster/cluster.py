@@ -1,4 +1,4 @@
-"""Multi-replica serving cluster simulator.
+"""Multi-replica serving cluster simulator with dynamic fleet membership.
 
 Composes N `repro.sim.ReplicaSim` replicas under one shared arrival
 stream. Requests are dispatched by a pluggable router at their arrival
@@ -22,6 +22,21 @@ Two cluster organizations:
                     between the first and second token, where it belongs
                     in the TPOT accounting.
 
+The fleet itself is dynamic when `simulate_cluster(..., autoscale=)` is
+given an `AutoscaleConfig`: a control loop fires every `interval` seconds,
+targets the observed arrival rate or the rolling SLO debt, and replicas
+join (after a weight-loading warmup priced from the cost model) or leave
+(graceful drain: no new admissions, in-flight work runs out, untouched
+queued arrivals are re-routed) mid-stream. Per-replica provisioning spans
+are billed so diurnal fleets report replica-hours against the
+static-peak-provisioned fleet that serves the same trace.
+
+Optionally the cluster sheds load instead of queueing without bound:
+when every eligible replica's depth is at `shed_depth`, the arrival is
+retried `retry_after` seconds later (up to `max_retries` times) and then
+dropped. Every generated request is therefore exactly once completed or
+shed — an invariant the tests pin.
+
 Cluster-level records stitch the per-stage records back into one
 `ReqRecord` per request (arrival at the cluster, TTFT from the prefill
 stage, finish from the decode stage), so `summarize_records` reports the
@@ -42,6 +57,7 @@ from repro.sim.metrics import summarize_records
 from repro.sim.scheduler import ReplicaSim, ReqRecord, SchedConfig, SimResult
 from repro.sim.workload import SimRequest
 
+from repro.cluster.autoscale import AutoscaleConfig, Autoscaler
 from repro.cluster.router import AffinityRouter, ReplicaView, make_router
 
 POOLS = ("mixed", "prefill", "decode")
@@ -80,6 +96,12 @@ class ClusterSpec:
     decode_router: str = "least_kv"  # KV-handoff routing (decode pool)
     hit_frac: float = 0.5  # affinity router's prefill-cache discount
     xfer_net: NetLevel | None = None  # None -> decode replica's top net level
+    router_slo_ttft: float = 2.0  # slo_debt router's TTFT deadline
+    debt_window: float = 30.0  # slo_debt router's rolling window (s)
+    # cross-replica load shedding (None = queue without bound)
+    shed_depth: int | None = None  # shed when EVERY eligible depth >= this
+    retry_after: float = 0.5  # seconds before a shed arrival is retried
+    max_retries: int = 2  # retries before the request is dropped
 
     @property
     def disaggregated(self) -> bool:
@@ -88,12 +110,22 @@ class ClusterSpec:
     def pool_indices(self, pool: str) -> list[int]:
         return [i for i, r in enumerate(self.replicas) if r.pool == pool]
 
+    def make_router(self, name: str):
+        return make_router(name, hit_frac=self.hit_frac,
+                           slo_ttft=self.router_slo_ttft,
+                           debt_window=self.debt_window)
+
     def validate(self) -> None:
         if not self.replicas:
             raise ValueError("cluster needs at least one replica")
         for r in self.replicas:
             if r.pool not in POOLS:
                 raise ValueError(f"unknown pool {r.pool!r}; choose from {POOLS}")
+        if self.shed_depth is not None:
+            if self.shed_depth < 1:
+                raise ValueError("shed_depth must be >= 1")
+            if self.retry_after <= 0 or self.max_retries < 0:
+                raise ValueError("need retry_after > 0 and max_retries >= 0")
         if self.disaggregated:
             if self.pool_indices("mixed"):
                 raise ValueError(
@@ -127,6 +159,12 @@ class ClusterResult:
     xfer_bytes: float = 0.0
     xfer_seconds: float = 0.0
     prefix_hits: int = 0
+    # dynamic-fleet accounting (static clusters: one full-span row each)
+    replica_specs: list[ReplicaSpec] = field(default_factory=list)
+    replica_spans: list[tuple[float, float]] = field(default_factory=list)
+    scale_events: list[dict] = field(default_factory=list)
+    shed: list[SimRequest] = field(default_factory=list)
+    retries: int = 0
 
     @property
     def makespan(self) -> float:
@@ -135,157 +173,434 @@ class ClusterResult:
         return (max(r.finish for r in self.records)
                 - min(r.arrival for r in self.records))
 
+    @property
+    def replica_hours(self) -> float:
+        """Provisioned replica-hours actually billed (warmup included)."""
+        return sum(e - s for s, e in self.replica_spans) / 3600.0
 
-def _views(sims: list[ReplicaSim], idxs: list[int]) -> list[ReplicaView]:
-    return [ReplicaView(i, sims[i].now, sims[i].queue_len, sims[i].live,
-                        sims[i].kv_used, sims[i].cap) for i in idxs]
+    @property
+    def replica_hours_static_peak(self) -> float:
+        """The counterfactual bill: the peak-concurrency fleet held for the
+        whole makespan (what static provisioning for this trace costs)."""
+        return self.peak_replicas * self.makespan / 3600.0
+
+    @property
+    def peak_replicas(self) -> int:
+        """Max concurrently-provisioned replicas — what a static fleet
+        sized for this trace's peak would have to run the whole time."""
+        return int(peak_over_spans(self.replica_spans))
+
+
+def peak_over_spans(spans, weights=None) -> float:
+    """Sweep-line peak of `sum(weight)` over overlapping (start, end)
+    spans — replica counts with unit weights, $/hr rates with prices. At
+    equal times releases sort before acquires (negative deltas first), so
+    back-to-back spans never count as overlapping."""
+    if weights is None:
+        weights = [1.0] * len(spans)
+    events = sorted((t, d * w) for (s, e), w in zip(spans, weights)
+                    for t, d in ((s, 1), (e, -1)))
+    cur = peak = 0.0
+    for _, d in events:
+        cur += d
+        peak = max(peak, cur)
+    return peak
+
+
+# --------------------------------------------------------- dynamic fleet state
+@dataclass
+class _Rep:
+    """One replica's lifecycle inside the engine."""
+
+    sim: ReplicaSim
+    spec: ReplicaSpec
+    cost: ServingCostModel
+    pool: str
+    started: float  # provisioning (billing) begins
+    ready: float  # accepting traffic from here (started + warmup)
+    drain_start: float = -1.0  # >= 0: no new admissions
+    retired: float = -1.0  # drained; billing ends
+
+    @property
+    def draining(self) -> bool:
+        return self.drain_start >= 0.0
+
+    @property
+    def provisioned(self) -> bool:
+        return self.retired < 0.0 and not self.draining
+
+    def accepting(self, now: float) -> bool:
+        return self.provisioned and self.ready <= now
+
+
+def _views(reps: list[_Rep], idxs: list[int], *,
+           at: float = 0.0) -> list[ReplicaView]:
+    """Router-facing snapshots. `at` is the dispatch instant: an idle
+    replica's own clock stops at its last event, so the view clock must be
+    clamped up to the observation time (time-windowed policies like
+    slo_debt would otherwise never expire old observations across gaps)."""
+    return [ReplicaView(i, max(reps[i].sim.now, at), reps[i].sim.queue_len,
+                        reps[i].sim.live, reps[i].sim.kv_used, reps[i].sim.cap)
+            for i in idxs]
+
+
+class _ClusterEngine:
+    """Shared event loop for colocated and disaggregated clusters, with
+    optional autoscaling. Events, in tie-break order at equal times:
+    request arrivals, shed-retry re-arrivals, KV-handoff completions,
+    autoscaler control ticks. Between events every replica is advanced to
+    the event time, harvesting completions (prefill handoffs, TTFT
+    feedback to the router and autoscaler, drain progress)."""
+
+    def __init__(self, spec: ClusterSpec, cfg: ModelConfig,
+                 autoscale: AutoscaleConfig | None, cache: dict):
+        self.spec = spec
+        self.cfg = cfg
+        self.cache = cache
+        self.disagg = spec.disaggregated
+        self.arrival_pool = "prefill" if self.disagg else "mixed"
+        self.router = spec.make_router(spec.router)
+        self.d_router = spec.make_router(spec.decode_router)
+        self.scaler = Autoscaler(autoscale) if autoscale is not None else None
+        self.asc = autoscale
+
+        self.reps: list[_Rep] = []
+        for rs in spec.replicas:
+            self._add_rep(rs, rs.pool, started=0.0, ready=0.0)
+        # KV handoffs price over one fixed link for the whole run: the
+        # explicit override, or the first decode replica's top net level
+        self.xfer_net = spec.xfer_net
+        if self.disagg and self.xfer_net is None:
+            d0 = spec.pool_indices("decode")[0]
+            self.xfer_net = self.reps[d0].cost.hw.net[-1]
+        # scale-up templates cycle over the spec's replicas of each pool
+        self._templates = {p: [rs for rs in spec.replicas if rs.pool == p]
+                           for p in dict.fromkeys(r.pool for r in spec.replicas)}
+        self._tmpl_i = {p: 0 for p in self._templates}
+
+        self.orig: dict[int, SimRequest] = {}
+        self.assignments: dict[int, list[int]] = {}
+        self.prefill_recs: dict[int, ReqRecord] = {}
+        self.decode_recs: dict[int, ReqRecord] = {}
+        self.retry_heap: list[tuple[float, int, int, SimRequest]] = []
+        self.xfers: list[tuple[float, int, SimRequest]] = []
+        self.seq = 0
+        self.shed: list[SimRequest] = []
+        self.retries = 0
+        self.scale_events: list[dict] = []
+        self.xfer_count, self.xfer_bytes, self.xfer_seconds = 0, 0.0, 0.0
+
+    # ----------------------------------------------------------- fleet changes
+    def _cost_for(self, rs: ReplicaSpec) -> ServingCostModel:
+        key = rs.cost_key()
+        if key not in self.cache:
+            self.cache[key] = rs.build_cost(self.cfg)
+        return self.cache[key]
+
+    def _add_rep(self, rs: ReplicaSpec, pool: str, *, started: float,
+                 ready: float) -> _Rep:
+        cost = self._cost_for(rs)
+        rep = _Rep(sim=ReplicaSim(cost, rs.sched,
+                                  name=f"r{len(self.reps)}:{pool}"),
+                   spec=rs, cost=cost, pool=pool, started=started, ready=ready)
+        self.reps.append(rep)
+        return rep
+
+    def _spawn(self, pool: str, t: float) -> None:
+        tmpls = self._templates[pool]
+        rs = tmpls[self._tmpl_i[pool] % len(tmpls)]
+        self._tmpl_i[pool] += 1
+        warm = self.scaler.asc.warmup_seconds(self._cost_for(rs))
+        rep = self._add_rep(rs, pool, started=t, ready=t + warm)
+        self.scale_events.append(
+            {"t": t, "action": "add", "replica": self.reps.index(rep),
+             "pool": pool, "ready": rep.ready})
+
+    def _retire(self, i: int, t: float) -> None:
+        """Cancel a still-warming replica: it never took traffic; billing
+        stops now (the partial warmup was still paid for)."""
+        rep = self.reps[i]
+        rep.retired = t
+        self.scale_events.append(
+            {"t": t, "action": "cancel", "replica": i, "pool": rep.pool})
+
+    def _drain(self, i: int, t: float) -> None:
+        rep = self.reps[i]
+        rep.drain_start = t
+        self.scale_events.append(
+            {"t": t, "action": "drain", "replica": i, "pool": rep.pool})
+        for req in rep.sim.evict_pending():
+            # stage requests (disagg prefill pushes output=1) map back to
+            # the original arrival before re-routing
+            self._dispatch(self.orig[req.rid], t, attempt=0)
+
+    def _pool_counts(self, pool: str) -> list[int]:
+        return [i for i, r in enumerate(self.reps)
+                if r.pool == pool and r.provisioned]
+
+    def _scale_pool(self, pool: str, want: int, t: float) -> None:
+        alive = self._pool_counts(pool)
+        for _ in range(max(0, want - len(alive))):
+            self._spawn(pool, t)
+        excess = len(alive) - want
+        if excess <= 0:
+            return
+        # cancel warming replicas first (newest first) — they hold no work
+        warming = [i for i in alive if self.reps[i].ready > t]
+        for i in sorted(warming, reverse=True)[:excess]:
+            self._retire(i, t)
+        excess -= min(excess, len(warming))
+        if excess <= 0:
+            return
+        # then drain the emptiest accepting replicas (newest breaks ties),
+        # always leaving at least one accepting replica in the pool
+        accepting = [i for i in alive if self.reps[i].ready <= t]
+        order = sorted(accepting,
+                       key=lambda i: (self.reps[i].sim.queue_len
+                                      + self.reps[i].sim.live,
+                                      self.reps[i].sim.kv_used, -i))
+        for i in order[:excess]:
+            if len([j for j in accepting if not self.reps[j].draining]) <= 1:
+                break
+            self._drain(i, t)
+
+    def _tick(self, t: float) -> None:
+        provisioned = [r for r in self.reps if r.provisioned]
+        want = self.scaler.desired(t, len(provisioned))
+        if self.disagg:
+            base_p = len(self.spec.pool_indices("prefill"))
+            base_d = len(self.spec.pool_indices("decode"))
+            want = max(want, 2)  # structural floor: >= 1 per pool
+            want_p = max(1, min(want - 1,
+                                round(want * base_p / (base_p + base_d))))
+            self._scale_pool("prefill", want_p, t)
+            self._scale_pool("decode", want - want_p, t)
+        else:
+            self._scale_pool("mixed", want, t)
+
+    # -------------------------------------------------------------- dispatch
+    def _dispatch(self, req: SimRequest, t: float, attempt: int) -> None:
+        elig = [i for i, r in enumerate(self.reps)
+                if r.pool == self.arrival_pool and r.accepting(t)]
+        assert elig, "fleet invariant violated: no accepting replica"
+        views = _views(self.reps, elig, at=t)
+        if (self.spec.shed_depth is not None
+                and min(v.depth for v in views) >= self.spec.shed_depth):
+            if attempt < self.spec.max_retries:
+                self.retries += 1
+                heapq.heappush(self.retry_heap,
+                               (t + self.spec.retry_after, self.seq,
+                                attempt + 1, req))
+                self.seq += 1
+            else:
+                self.shed.append(req)
+            return
+        i, cached = self.router.pick(req, views)
+        # retried / drain-requeued requests re-enter at the dispatch time
+        # (a replica's clock may lag global time when idle, and admission
+        # must not predate the re-dispatch); cluster records are stitched
+        # back onto the original arrival so TTFT keeps the backoff paid
+        staged = replace(req, arrival=t, output=1) if self.disagg \
+            else replace(req, arrival=t)
+        rec = self.reps[i].sim.push(staged, cached=cached)
+        if self.disagg:
+            # prefill stage ends at the first token; decode happens elsewhere
+            self.prefill_recs[req.rid] = rec
+        self.assignments[req.rid] = [i, -1]
+
+    def _dispatch_xfer(self, ready: float, req: SimRequest) -> None:
+        elig = [i for i, r in enumerate(self.reps)
+                if r.pool == "decode" and r.accepting(ready)]
+        assert elig, "fleet invariant violated: no accepting decode replica"
+        j, _ = self.d_router.pick(req, _views(self.reps, elig, at=ready))
+        self.decode_recs[req.rid] = self.reps[j].sim.push(
+            replace(req, arrival=ready), cached=req.prompt, generated=1)
+        self.assignments[req.rid][1] = j
+
+    # --------------------------------------------------------------- advance
+    def _harvest(self, i: int, done: list[ReqRecord]) -> None:
+        rep = self.reps[i]
+        for rec in done:
+            if rep.pool in ("mixed", "prefill") and rec.first_token >= 0:
+                # end-to-end TTFT, from the ORIGINAL arrival: shed-retry
+                # backoff counts as debt (the user waited through it), so
+                # the signals see the same SLO breach the stitched records
+                # report instead of the replica-local staged wait
+                ttft = rec.first_token - self.orig[rec.rid].arrival
+                self.router.observe(i, rec.finish, ttft)
+                if self.scaler is not None:
+                    self.scaler.observe_ttft(rec.finish, ttft)
+            if rep.pool != "prefill":
+                continue
+            req = self.orig[rec.rid]
+            if req.output <= 1:
+                continue  # single-token request: served entirely by prefill
+            nbytes = rep.cost.kv_handoff_bytes(req.prompt)
+            dt = C.p2p(nbytes, self.xfer_net)
+            heapq.heappush(self.xfers, (rec.finish + dt, self.seq, req))
+            self.seq += 1
+            self.xfer_count += 1
+            self.xfer_bytes += nbytes
+            self.xfer_seconds += dt
+
+    def _check_drained(self) -> None:
+        for rep in self.reps:
+            if rep.draining and rep.retired < 0 and not rep.sim.has_work:
+                rep.retired = max(rep.sim.now, rep.drain_start)
+
+    def _advance_all(self, t: float) -> None:
+        """Advance every replica to `t` in lockstep (least-clock first),
+        dispatching KV handoffs punctually the moment they become ready.
+
+        Each pending handoff's ready time is a sub-target: all replicas
+        are stepped up to it BEFORE the handoff is routed, so the decode
+        router always observes the fleet as of the dispatch instant. The
+        resulting step/dispatch sequence is a global merge ordered by
+        (sim clock, handoff ready) and therefore invariant to the
+        advance's intermediate targets — advancing to t' then t equals
+        advancing straight to t — which is what lets autoscaler control
+        ticks observe the fleet without perturbing the schedule (the
+        pinned-bounds parity contract)."""
+        while True:
+            t_sub = min(t, self.xfers[0][0]) if self.xfers else t
+            cands = [(rep.sim.now, i) for i, rep in enumerate(self.reps)
+                     if rep.sim.has_work and rep.sim.now < t_sub]
+            if cands:
+                _, i = min(cands)
+                self._harvest(i, self.reps[i].sim.step())
+                continue
+            if self.xfers and self.xfers[0][0] <= t:
+                ready, _, req = heapq.heappop(self.xfers)
+                self._dispatch_xfer(ready, req)
+                continue
+            break
+        self._check_drained()
+
+    @property
+    def _sim_work(self) -> bool:
+        return any(r.sim.has_work for r in self.reps)
+
+    # -------------------------------------------------------------- main loop
+    def run(self, ordered: list[SimRequest]) -> None:
+        self.orig = {r.rid: r for r in ordered}
+        arrivals = deque(ordered)
+        interval = self.asc.interval if self.asc is not None else _INF
+        next_tick = interval
+        while True:
+            t_arr = arrivals[0].arrival if arrivals else _INF
+            t_rty = self.retry_heap[0][0] if self.retry_heap else _INF
+            t_xfr = self.xfers[0][0] if self.xfers else _INF
+            # ticks stop once nothing is pending anywhere (else they'd
+            # fire forever); pending work keeps the control loop honest
+            t_tck = (next_tick if self.scaler is not None
+                     and (arrivals or self.retry_heap or self.xfers
+                          or self._sim_work) else _INF)
+            t_evt = min(t_arr, t_rty, t_xfr, t_tck)
+            if t_evt == _INF:
+                if self._sim_work or self.xfers:
+                    self._advance_all(_INF)  # final drain (punctual handoffs)
+                    continue
+                break
+            self._advance_all(t_evt)  # handoffs ready <= t_evt dispatch inside
+            if t_arr == t_evt:
+                req = arrivals.popleft()
+                if self.scaler is not None:
+                    self.scaler.observe_arrival(req.arrival)
+                self._dispatch(req, req.arrival, attempt=0)
+            elif t_rty == t_evt:
+                t, _, attempt, req = heapq.heappop(self.retry_heap)
+                self._dispatch(req, t, attempt)
+            elif t_tck == t_evt:
+                # the advance may have finished the last pending work this
+                # tick was gated on; scaling an idle, finished fleet would
+                # spawn replicas that never serve (and bill phantom spans)
+                if (arrivals or self.retry_heap or self.xfers
+                        or self._sim_work):
+                    self._tick(next_tick)
+                next_tick += interval
+            # else: the event was a transfer, consumed by the advance
+
+    # ----------------------------------------------------------------- result
+    def result(self) -> ClusterResult:
+        shed_rids = {r.rid for r in self.shed}
+        if self.disagg:
+            records = []
+            for req in self.orig.values():
+                if req.rid in shed_rids:
+                    continue
+                pre = self.prefill_recs[req.rid]
+                dec = self.decode_recs.get(req.rid)
+                records.append(ReqRecord(
+                    req.rid, req.arrival, req.prompt, req.output,
+                    admitted=pre.admitted, first_token=pre.first_token,
+                    finish=dec.finish if dec is not None else pre.finish,
+                    preemptions=pre.preemptions
+                    + (dec.preemptions if dec else 0)))
+            mode = "disaggregated"
+        else:
+            # stitch back onto the original arrivals (retried requests were
+            # re-pushed at their re-dispatch time)
+            records = sorted(
+                (ReqRecord(rec.rid, self.orig[rec.rid].arrival, rec.prompt,
+                           rec.output, admitted=rec.admitted,
+                           first_token=rec.first_token, finish=rec.finish,
+                           preemptions=rec.preemptions)
+                 for rep in self.reps for rec in rep.sim.res.records),
+                key=lambda r: r.rid)
+            mode = "colocated"
+        end = max([rep.sim.now for rep in self.reps]
+                  + [rep.retired for rep in self.reps] + [0.0])
+        # clamp: a replica spawned near the end of the run (e.g. for a
+        # retry that was ultimately shed) must never bill a negative span
+        spans = [(rep.started,
+                  max(rep.started, rep.retired if rep.retired >= 0 else end))
+                 for rep in self.reps]
+        return ClusterResult(
+            mode=mode, records=records,
+            replica_results=[rep.sim.res for rep in self.reps],
+            replica_pools=[rep.pool for rep in self.reps],
+            assignments={k: tuple(v) for k, v in self.assignments.items()},
+            xfer_count=self.xfer_count, xfer_bytes=self.xfer_bytes,
+            xfer_seconds=self.xfer_seconds,
+            prefix_hits=(self.router.hits
+                         if isinstance(self.router, AffinityRouter) else 0),
+            replica_specs=[rep.spec for rep in self.reps],
+            replica_spans=spans, scale_events=self.scale_events,
+            shed=list(self.shed), retries=self.retries)
 
 
 def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
                      spec: ClusterSpec, *,
+                     autoscale: AutoscaleConfig | None = None,
                      _cost_cache: dict | None = None) -> ClusterResult:
     """Co-simulate the cluster over one shared arrival stream.
+
+    With `autoscale`, `spec.replicas` is the fleet at t=0 (already warm)
+    and the control loop adds/drains replicas mid-stream; without it the
+    fleet is fixed, and the result is step-for-step identical to an
+    autoscaled run whose bounds pin the fleet (`min == max == N`).
 
     `_cost_cache` lets sweeps (the capacity planner) share memoized
     `ServingCostModel`s across many cluster candidates."""
     spec.validate()
+    if autoscale is not None:
+        autoscale.validate()
+        if spec.disaggregated and autoscale.max_replicas < 2:
+            raise ValueError(
+                "disaggregated autoscaling needs max_replicas >= 2 "
+                "(>= 1 prefill AND >= 1 decode replica at all times)")
     cache = _cost_cache if _cost_cache is not None else {}
-    costs = []
-    for rs in spec.replicas:
-        key = rs.cost_key()
-        if key not in cache:
-            cache[key] = rs.build_cost(cfg)
-        costs.append(cache[key])
-    sims = [ReplicaSim(cost, rs.sched, name=f"r{i}:{rs.pool}")
-            for i, (rs, cost) in enumerate(zip(spec.replicas, costs))]
-    ordered = sorted(requests, key=lambda r: (r.arrival, r.rid))
-    if spec.disaggregated:
-        return _run_disaggregated(ordered, spec, sims, costs)
-    return _run_colocated(ordered, spec, sims)
-
-
-# ---------------------------------------------------------------- colocated
-def _run_colocated(ordered, spec, sims) -> ClusterResult:
-    router = make_router(spec.router, hit_frac=spec.hit_frac)
-    idxs = list(range(len(sims)))
-    assignments = {}
-    for req in ordered:
-        for s in sims:
-            s.run_until(req.arrival)
-        i, cached = router.pick(req, _views(sims, idxs))
-        sims[i].push(req, cached=cached)
-        assignments[req.rid] = (i, -1)
-    for s in sims:
-        s.run()
-    records = sorted((rec for s in sims for rec in s.res.records),
-                     key=lambda r: r.rid)
-    return ClusterResult(
-        mode="colocated", records=records,
-        replica_results=[s.res for s in sims],
-        replica_pools=[r.pool for r in spec.replicas],
-        assignments=assignments,
-        prefix_hits=router.hits if isinstance(router, AffinityRouter) else 0)
-
-
-# ------------------------------------------------------------- disaggregated
-def _run_disaggregated(ordered, spec, sims, costs) -> ClusterResult:
-    p_idx = spec.pool_indices("prefill")
-    d_idx = spec.pool_indices("decode")
-    p_set = set(p_idx)
-    p_router = make_router(spec.router, hit_frac=spec.hit_frac)
-    d_router = make_router(spec.decode_router)
-    net = spec.xfer_net or costs[d_idx[0]].hw.net[-1]
-
-    arrivals = deque(ordered)
-    orig = {r.rid: r for r in ordered}
-    xfers: list[tuple[float, int, SimRequest]] = []  # heap: (ready, seq, req)
-    seq = 0
-    prefill_recs: dict[int, ReqRecord] = {}
-    decode_recs: dict[int, ReqRecord] = {}
-    assignments: dict[int, list[int]] = {}
-    xfer_count, xfer_bytes, xfer_seconds = 0, 0.0, 0.0
-
-    def harvest(i: int, done: list[ReqRecord]) -> None:
-        """Prefill completions become KV transfers to the decode pool."""
-        nonlocal seq, xfer_count, xfer_bytes, xfer_seconds
-        if i not in p_set:
-            return
-        for rec in done:
-            req = orig[rec.rid]
-            if req.output <= 1:
-                continue  # single-token request: served entirely by prefill
-            nbytes = costs[i].kv_handoff_bytes(req.prompt)
-            dt = C.p2p(nbytes, net)
-            heapq.heappush(xfers, (rec.finish + dt, seq, req))
-            seq += 1
-            xfer_count += 1
-            xfer_bytes += nbytes
-            xfer_seconds += dt
-
-    def advance_all(t: float) -> None:
-        for i, s in enumerate(sims):
-            while s.has_work and s.now < t:
-                harvest(i, s.step())
-
-    while True:
-        t_arr = arrivals[0].arrival if arrivals else _INF
-        t_xfer = xfers[0][0] if xfers else _INF
-        if t_arr == _INF and t_xfer == _INF:
-            progressed = False
-            for i, s in enumerate(sims):
-                if s.has_work:
-                    progressed = True
-                    harvest(i, s.step())
-            if arrivals or xfers:
-                continue
-            if not progressed:
-                break
-            continue
-        t_evt = min(t_arr, t_xfer)
-        advance_all(t_evt)
-        # a harvest during the advance can surface an earlier transfer;
-        # re-resolve so events are always dispatched in global time order
-        t_arr = arrivals[0].arrival if arrivals else _INF
-        t_xfer = xfers[0][0] if xfers else _INF
-        if min(t_arr, t_xfer) < t_evt:
-            continue
-        if t_arr <= t_xfer:
-            req = arrivals.popleft()
-            i, cached = p_router.pick(req, _views(sims, p_idx))
-            # prefill stage ends at the first token; decode happens elsewhere
-            prefill_recs[req.rid] = sims[i].push(replace(req, output=1),
-                                                cached=cached)
-            assignments[req.rid] = [i, -1]
-        else:
-            ready, _, req = heapq.heappop(xfers)
-            j, _ = d_router.pick(req, _views(sims, d_idx))
-            decode_recs[req.rid] = sims[j].push(
-                replace(req, arrival=ready), cached=req.prompt, generated=1)
-            assignments[req.rid][1] = j
-
-    records = []
-    for req in ordered:
-        pre = prefill_recs[req.rid]
-        dec = decode_recs.get(req.rid)
-        records.append(ReqRecord(
-            req.rid, req.arrival, req.prompt, req.output,
-            admitted=pre.admitted, first_token=pre.first_token,
-            finish=dec.finish if dec is not None else pre.finish,
-            preemptions=pre.preemptions + (dec.preemptions if dec else 0)))
-    return ClusterResult(
-        mode="disaggregated", records=records,
-        replica_results=[s.res for s in sims],
-        replica_pools=[r.pool for r in spec.replicas],
-        assignments={k: tuple(v) for k, v in assignments.items()},
-        xfer_count=xfer_count, xfer_bytes=xfer_bytes, xfer_seconds=xfer_seconds,
-        prefix_hits=p_router.hits if isinstance(p_router, AffinityRouter) else 0)
+    engine = _ClusterEngine(spec, cfg, autoscale, cache)
+    engine.run(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+    return engine.result()
 
 
 # ------------------------------------------------------------------ metrics
 def summarize_cluster(cres: ClusterResult, *, slo_ttft: float | None = None,
                       slo_tpot: float | None = None) -> dict:
     """Cluster-level SLO metric dict over the stitched records, plus
-    aggregate counters and the KV-transfer overhead share."""
+    aggregate counters, the KV-transfer overhead share, and the dynamic-
+    fleet provisioning economics (replica-hours vs static peak)."""
     span = cres.makespan
     out: dict = {"mode": cres.mode, "replicas": len(cres.replica_results)}
     out.update(summarize_records(cres.records, span=span,
@@ -301,6 +616,14 @@ def summarize_cluster(cres: ClusterResult, *, slo_ttft: float | None = None,
     out["xfer_share"] = cres.xfer_seconds / e2e_total if e2e_total > 0 else 0.0
     denom = max(span, 1e-12)
     out["replica_util"] = [r.busy_s / denom for r in cres.replica_results]
+    out["shed"] = len(cres.shed)
+    total = len(cres.records) + len(cres.shed)
+    out["shed_frac"] = len(cres.shed) / total if total else 0.0
+    out["retries"] = cres.retries
+    out["scale_events"] = len(cres.scale_events)
+    out["peak_replicas"] = cres.peak_replicas
+    out["replica_hours"] = cres.replica_hours
+    out["replica_hours_static_peak"] = cres.replica_hours_static_peak
     return out
 
 

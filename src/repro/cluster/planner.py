@@ -24,6 +24,7 @@ from repro.sim.workload import Workload
 from repro.cluster.cluster import (
     ClusterSpec,
     ReplicaSpec,
+    peak_over_spans,
     simulate_cluster,
     summarize_cluster,
 )
@@ -53,6 +54,31 @@ def replica_price_per_hr(rs: ReplicaSpec, table: dict | None = None) -> float:
 
 def cluster_price_per_hr(spec: ClusterSpec, table: dict | None = None) -> float:
     return sum(replica_price_per_hr(rs, table) for rs in spec.replicas)
+
+
+def provisioning_summary(cres, table: dict | None = None) -> dict:
+    """Price a (possibly dynamic) cluster run's actual provisioning against
+    static peak provisioning of the same trace.
+
+    `replica_hours` bills each replica for its provisioned span (warmup and
+    drain tails included); the static-peak counterfactual runs the maximum
+    concurrently-provisioned fleet for the whole makespan — what you'd have
+    to deploy without an autoscaler to survive the trace's peak. The
+    savings fraction is the autoscaling headline number on diurnal traces."""
+    prices = [replica_price_per_hr(rs, table) for rs in cres.replica_specs]
+    span = cres.makespan
+    cost = sum(p * (e - s) / 3600.0
+               for p, (s, e) in zip(prices, cres.replica_spans))
+    # static peak $: the max concurrent price rate, held for the whole span
+    static_cost = peak_over_spans(cres.replica_spans, prices) * span / 3600.0
+    return {
+        "replica_hours": cres.replica_hours,
+        "replica_hours_static_peak": cres.replica_hours_static_peak,
+        "cost_usd": cost,
+        "cost_usd_static_peak": static_cost,
+        "savings_frac": 1.0 - cost / static_cost if static_cost > 0 else 0.0,
+        "peak_replicas": cres.peak_replicas,
+    }
 
 
 def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,

@@ -11,6 +11,14 @@ routing exists to exploit: a request landing on the replica that last
 served its session skips `hit_frac` of its prompt prefill (the prefix is
 already resident), entering the replica with `cached` tokens. Cache
 capacity/eviction is not modeled yet — see ROADMAP.
+
+`slo_debt` closes the loop on outcomes instead of state: the cluster
+engine feeds completed requests' TTFTs back via `observe()`, and the
+router sends new work to the replica with the lowest rolling TTFT-SLO
+violation fraction — instantaneous queue depth only breaks ties. This is
+the "route on SLO debt, not queue length" feedback policy; it reacts to
+what replicas actually delivered (useful under heterogeneous hardware,
+where equal depths hide unequal speeds).
 """
 
 from __future__ import annotations
@@ -19,7 +27,9 @@ from dataclasses import dataclass
 
 from repro.sim.workload import SimRequest
 
-ROUTERS = ("round_robin", "jsq", "least_kv", "affinity")
+from repro.cluster.autoscale import RollingFlagWindow
+
+ROUTERS = ("round_robin", "jsq", "least_kv", "affinity", "slo_debt")
 
 
 @dataclass(frozen=True)
@@ -43,12 +53,17 @@ class ReplicaView:
 
 
 class Router:
-    """`pick()` returns (chosen replica idx, prefix-cached prompt tokens)."""
+    """`pick()` returns (chosen replica idx, prefix-cached prompt tokens).
+    `observe()` is the cluster engine's outcome feedback channel (completed
+    requests' TTFTs); stateless policies ignore it."""
 
     name = "base"
 
     def pick(self, req: SimRequest, views: list[ReplicaView]) -> tuple[int, int]:
         raise NotImplementedError
+
+    def observe(self, idx: int, t: float, ttft: float) -> None:
+        pass
 
 
 class RoundRobinRouter(Router):
@@ -111,7 +126,41 @@ class AffinityRouter(Router):
         return v.idx, 0
 
 
-def make_router(name: str, *, hit_frac: float = 0.5) -> Router:
+class SLODebtRouter(Router):
+    """Route to the replica with the lowest rolling TTFT-SLO debt.
+
+    Debt is the violation fraction (ttft > slo_ttft) over the completions
+    observed in the trailing `window` seconds; replicas with no recent
+    completions carry zero debt (they are safe bets). Queue depth, then KV
+    load, then index break ties, so a cold fleet degenerates to JSQ."""
+
+    name = "slo_debt"
+
+    def __init__(self, slo_ttft: float = 2.0, window: float = 30.0):
+        if slo_ttft <= 0 or window <= 0:
+            raise ValueError("slo_ttft and window must be positive")
+        self.slo_ttft = float(slo_ttft)
+        self.window = float(window)
+        self._obs: dict[int, RollingFlagWindow] = {}  # per-replica debt
+
+    def observe(self, idx, t, ttft):
+        if idx not in self._obs:
+            self._obs[idx] = RollingFlagWindow(self.window)
+        self._obs[idx].add(t, ttft > self.slo_ttft)
+
+    def debt(self, idx: int, now: float) -> float:
+        w = self._obs.get(idx)
+        return w.frac(now) if w is not None else 0.0
+
+    def pick(self, req, views):
+        now = max(v.now for v in views)
+        v = min(views, key=lambda v: (self.debt(v.idx, now), v.depth,
+                                      v.kv_used, v.idx))
+        return v.idx, 0
+
+
+def make_router(name: str, *, hit_frac: float = 0.5, slo_ttft: float = 2.0,
+                debt_window: float = 30.0) -> Router:
     if name == "round_robin":
         return RoundRobinRouter()
     if name == "jsq":
@@ -120,4 +169,6 @@ def make_router(name: str, *, hit_frac: float = 0.5) -> Router:
         return LeastKVLoadRouter()
     if name == "affinity":
         return AffinityRouter(hit_frac)
+    if name == "slo_debt":
+        return SLODebtRouter(slo_ttft, debt_window)
     raise ValueError(f"unknown router {name!r}; choose from {ROUTERS}")

@@ -33,7 +33,15 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--prec", type=int, default=2, help="bytes per weight/act element")
     p.add_argument("--qps", type=float, default=8.0)
     p.add_argument("--requests", type=int, default=200)
-    p.add_argument("--arrival", default="poisson", choices=["constant", "poisson", "bursty"])
+    p.add_argument("--arrival", default="poisson",
+                   choices=["constant", "poisson", "bursty", "diurnal",
+                            "envelope"])
+    p.add_argument("--diurnal-period", type=float, default=240.0,
+                   help="seconds per compressed day (--arrival diurnal)")
+    p.add_argument("--diurnal-amp", type=float, default=0.8,
+                   help="relative rate swing in [0, 1] (--arrival diurnal)")
+    p.add_argument("--rate-path", default=None,
+                   help="JSONL rate envelope {t, qps} (--arrival envelope)")
     p.add_argument("--prompt-dist", default="lognormal", choices=["fixed", "lognormal"])
     p.add_argument("--prompt-mean", type=float, default=512)
     p.add_argument("--prompt-sigma", type=float, default=0.4)
@@ -75,6 +83,9 @@ def main(argv=None) -> None:
         output=LengthDist(args.output_dist, args.output_mean, args.output_sigma),
         seed=args.seed,
         trace_path=args.trace,
+        diurnal_period=args.diurnal_period,
+        diurnal_amp=args.diurnal_amp,
+        rate_path=args.rate_path,
     )
     reqs = wl.generate()
     kv_cap = args.kv_gb * 1e9 if args.kv_gb is not None else None

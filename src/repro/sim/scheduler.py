@@ -229,6 +229,25 @@ class ReplicaSim:
         self._pending.append(_Run(req, rec, cached=cached, generated=generated))
         return rec
 
+    def evict_pending(self) -> list[SimRequest]:
+        """Remove and return queued requests that were never admitted (no
+        slot, no KV, no emitted tokens) — the graceful-drain contract: a
+        replica leaving the fleet runs out everything it has started
+        (including preempted-and-requeued work, which has already emitted
+        tokens) but hands untouched arrivals back for re-routing. The
+        evicted requests' records are withdrawn as if never pushed here."""
+        keep: deque[_Run] = deque()
+        out: list[SimRequest] = []
+        for r in self._pending:
+            if r.rec.admitted < 0 and r.cached == 0 and r.generated == 0:
+                out.append(r.req)
+                self.res.records.remove(r.rec)
+                self._rids.discard(r.req.rid)
+            else:
+                keep.append(r)
+        self._pending = keep
+        return out
+
     # ------------------------------------------------------------- event loop
     def step(self) -> list[ReqRecord]:
         """Execute one engine iteration; returns records that finished."""

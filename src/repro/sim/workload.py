@@ -1,12 +1,26 @@
 """Seeded workload generation for the serving simulator.
 
 A `Workload` is a declarative spec — arrival process (constant, Poisson,
-bursty hyperexponential), prompt/output length distributions (fixed,
-lognormal), or a JSONL trace replay — that `generate()` expands into a
-deterministic list of `SimRequest`s. The same spec drives both the
-analytical simulator (`repro.sim.scheduler`) and the real `ServeEngine`
-(via `to_engine_requests`), so simulated and executed schedules are
-comparable request-for-request.
+bursty hyperexponential, diurnal, rate-envelope replay), prompt/output
+length distributions (fixed, lognormal), or a JSONL trace replay — that
+`generate()` expands into a deterministic list of `SimRequest`s. The same
+spec drives both the analytical simulator (`repro.sim.scheduler`) and the
+real `ServeEngine` (via `to_engine_requests`), so simulated and executed
+schedules are comparable request-for-request.
+
+Time-varying arrivals are a non-homogeneous Poisson process sampled by
+Lewis-Shedler thinning of a homogeneous process at the envelope peak:
+
+  * `arrival="diurnal"`  — sinusoidal rate envelope
+    `rate(t) = qps * (1 + diurnal_amp * sin(2*pi*(t/diurnal_period +
+    diurnal_phase)))`, the compressed day/night cycle autoscaling studies
+    are run against (mean rate stays `qps`).
+  * `arrival="envelope"` — piecewise-linear rate envelope replayed from a
+    JSONL file (`rate_path`) of {"t": seconds, "qps": rate} rows (aliases
+    "time"/"rate"), for replaying measured production rate curves.
+
+`rate_at(t)` exposes the envelope so autoscaling policies and plots can
+reference the offered load the generator drew from.
 
 Trace JSONL rows: {"arrival": s, "prompt": n, "output": m} — the aliases
 "arrival_s", "prompt_tokens"/"input_tokens", "output_tokens" are accepted
@@ -63,7 +77,7 @@ class Workload:
     name: str = "synthetic"
     qps: float = 8.0
     num_requests: int = 128
-    arrival: str = "poisson"  # constant | poisson | bursty
+    arrival: str = "poisson"  # constant | poisson | bursty | diurnal | envelope
     prompt: LengthDist = field(default_factory=lambda: LengthDist("lognormal", 512.0))
     output: LengthDist = field(default_factory=lambda: LengthDist("fixed", 128.0))
     seed: int = 0
@@ -74,6 +88,11 @@ class Workload:
     trace_path: str | None = None
     num_sessions: int = 0  # >0: assign each request a session id in [0, n)
     slo_ttft: float | tuple | None = None  # scalar, or tuple sampled per request
+    # diurnal envelope: mean rate stays `qps`, peak is qps * (1 + amp)
+    diurnal_period: float = 240.0  # seconds per (compressed) day
+    diurnal_amp: float = 0.8  # relative swing, in [0, 1]
+    diurnal_phase: float = 0.0  # cycle offset, fraction of a period
+    rate_path: str | None = None  # JSONL rate envelope (arrival="envelope")
 
     # ------------------------------------------------------------- generation
     def generate(self) -> list[SimRequest]:
@@ -111,8 +130,9 @@ class Workload:
         which correlates the low bits of neighbouring streams."""
         if n < 1:
             raise ValueError("substreams needs n >= 1")
-        if self.trace_path is not None:
-            raise ValueError("substreams applies to synthetic specs, not traces")
+        if self.trace_path is not None or self.rate_path is not None:
+            raise ValueError("substreams applies to synthetic specs, not "
+                             "trace/envelope replays")
         children = np.random.SeedSequence(self.seed).spawn(n)
         counts = [self.num_requests // n + (1 if i < self.num_requests % n else 0)
                   for i in range(n)]
@@ -123,9 +143,86 @@ class Workload:
             for i in range(n)
         ]
 
+    # -------------------------------------------------------- rate envelopes
+    def _envelope(self) -> tuple[np.ndarray, np.ndarray]:
+        """(times, rates) breakpoints of the piecewise-linear envelope,
+        parsed once per spec (frozen dataclass; cached out-of-band)."""
+        cached = getattr(self, "_env_cache", None)
+        if cached is not None:
+            return cached
+        if self.rate_path is None:
+            raise ValueError('arrival="envelope" needs rate_path=')
+        ts, rs = [], []
+        with open(self.rate_path) as f:
+            for i, line in enumerate(f):
+                line = line.strip()
+                if not line:
+                    continue
+                row = json.loads(line)
+                t = row.get("t", row.get("time"))
+                r = row.get("qps", row.get("rate"))
+                if t is None or r is None:
+                    raise ValueError(f"rate envelope row {i} needs t/qps: {row}")
+                if float(r) < 0:
+                    raise ValueError(f"rate envelope row {i} has negative rate")
+                ts.append(float(t))
+                rs.append(float(r))
+        if not ts:
+            raise ValueError(f"rate envelope {self.rate_path!r} is empty")
+        order = np.argsort(ts, kind="stable")
+        ts_a, rs_a = np.asarray(ts)[order], np.asarray(rs)[order]
+        if rs_a[-1] <= 0:
+            # the envelope is held constant past its last breakpoint, so a
+            # zero tail means arrivals stop forever — thinning would spin
+            raise ValueError(
+                f"rate envelope {self.rate_path!r} ends at rate 0; the tail "
+                "rate is held forever and the workload could never finish "
+                "generating (end the trace on a positive rate)")
+        object.__setattr__(self, "_env_cache", (ts_a, rs_a))
+        return ts_a, rs_a
+
+    def rate_at(self, t: float) -> float:
+        """Offered arrival rate (requests/s) at time `t` under this spec's
+        envelope; constant specs just return `qps`."""
+        if self.arrival == "diurnal":
+            return self.qps * (1.0 + self.diurnal_amp * np.sin(
+                2.0 * np.pi * (t / self.diurnal_period + self.diurnal_phase)))
+        if self.arrival == "envelope":
+            ts, rs = self._envelope()
+            return float(np.interp(t, ts, rs))
+        return self.qps
+
+    def _thinned_arrivals(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Non-homogeneous Poisson arrivals by Lewis-Shedler thinning: draw a
+        homogeneous process at the envelope peak, accept each candidate with
+        probability rate(t)/peak. One uniform is drawn per candidate, so the
+        stream is deterministic in (seed, envelope)."""
+        if self.arrival == "diurnal":
+            if not 0.0 <= self.diurnal_amp <= 1.0:
+                raise ValueError("diurnal_amp must be in [0, 1]")
+            if self.diurnal_period <= 0:
+                raise ValueError("diurnal_period must be positive")
+            lam_max = self.qps * (1.0 + self.diurnal_amp)
+        else:
+            lam_max = float(self._envelope()[1].max())
+        if lam_max <= 0:
+            raise ValueError("rate envelope peak must be positive")
+        out = np.empty(n)
+        t, i = 0.0, 0
+        while i < n:
+            t += rng.exponential(1.0 / lam_max)
+            if rng.random() * lam_max <= self.rate_at(t):
+                out[i] = t
+                i += 1
+        return out
+
     def _gaps(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        if self.arrival == "envelope":
+            return np.diff(self._thinned_arrivals(rng, n), prepend=0.0)
         if self.qps <= 0:
             raise ValueError("qps must be positive")
+        if self.arrival == "diurnal":
+            return np.diff(self._thinned_arrivals(rng, n), prepend=0.0)
         mean_gap = 1.0 / self.qps
         if self.arrival == "constant":
             return np.full(n, mean_gap)

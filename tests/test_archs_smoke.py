@@ -10,6 +10,9 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, SMOKE_SHAPES, get_config, input_specs, applicable, SHAPES
 from repro.models.transformer import Model
 
+# JAX compile-heavy: excluded from the fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_arch_train_step(arch):

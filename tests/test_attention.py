@@ -9,6 +9,9 @@ import jax.numpy as jnp
 from repro.models.attention import _chunked_attention, _dense_attention
 from repro.models.flash_vjp import flash_attention_vjp
 
+# JAX compile-heavy: excluded from the fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 
 def _rand(key, *shape):
     return 0.3 * jax.random.normal(key, shape, jnp.float32)

@@ -1,0 +1,348 @@
+"""repro.cluster.autoscale: pinned-bounds parity with the static cluster,
+request conservation (exactly-once completed-or-shed) across scale-ups,
+drains, and retries, warmup/drain semantics, shedding, the SLO-debt
+signals, and provisioning economics vs static peak."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.hardware import H100_SXM
+from repro.sim import LengthDist, SchedConfig, ServingCostModel, SimRequest, Workload
+from repro.cluster import (
+    AutoscaleConfig,
+    Autoscaler,
+    ClusterSpec,
+    ReplicaSpec,
+    provisioning_summary,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+CFG = get_config("qwen3_14b")
+
+
+def _wl(**kw):
+    base = dict(
+        qps=30.0, num_requests=60, arrival="diurnal",
+        diurnal_period=20.0, diurnal_amp=0.9,
+        prompt=LengthDist("lognormal", 96, 0.4, lo=8, hi=512),
+        output=LengthDist("lognormal", 24, 0.4, lo=2, hi=128), seed=0,
+    )
+    base.update(kw)
+    return Workload(**base)
+
+
+def _spec(pools, *, sched=None, **kw):
+    sched = sched or SchedConfig(slots=8)
+    return ClusterSpec(
+        replicas=tuple(ReplicaSpec(hw="h100", pool=p, sched=sched, ctx_quantum=32)
+                       for p in pools),
+        **kw)
+
+
+def _records_key(cres):
+    return [(r.rid, r.admitted, r.first_token, r.finish)
+            for r in sorted(cres.records, key=lambda r: r.rid)]
+
+
+# ------------------------------------------------------------ pinned parity
+@pytest.mark.parametrize("pools", [["mixed"] * 3,
+                                   ["prefill", "decode", "decode"]])
+def test_pinned_bounds_reproduce_static_cluster_exactly(pools):
+    # min == max == N: the control loop ticks but never acts, and every
+    # record is bit-identical to the static N-replica cluster
+    reqs = _wl().generate()
+    n = len(pools)
+    static = simulate_cluster(reqs, CFG, _spec(pools))
+    pinned = simulate_cluster(
+        reqs, CFG, _spec(pools),
+        autoscale=AutoscaleConfig(min_replicas=n, max_replicas=n,
+                                  interval=0.5, warmup=1.0))
+    assert _records_key(pinned) == _records_key(static)
+    assert pinned.assignments == static.assignments
+    assert pinned.scale_events == []
+    assert [r.iterations for r in pinned.replica_results] == \
+        [r.iterations for r in static.replica_results]
+
+
+# ------------------------------------------------------------- conservation
+@pytest.mark.parametrize("seed", range(4))
+def test_conservation_across_scaling_and_shedding(seed):
+    # scale-ups, scale-down drains, retries, and shedding together: every
+    # generated request is EXACTLY once completed or shed
+    reqs = _wl(seed=seed, num_requests=80, qps=60.0).generate()
+    spec = _spec(["mixed"] * 2, shed_depth=10, retry_after=0.2, max_retries=1)
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=4,
+                          interval=0.5, window=2.0, target_qps_per_replica=10.0,
+                          warmup=0.5)
+    cres = simulate_cluster(reqs, CFG, spec, autoscale=asc)
+    done = sorted(r.rid for r in cres.records)
+    shed = sorted(r.rid for r in cres.shed)
+    assert sorted(done + shed) == list(range(80))  # exactly-once, no overlap
+    for r in cres.records:
+        assert r.finish >= r.first_token >= r.arrival
+        assert r.admitted >= r.arrival
+    for rep in cres.replica_results:
+        assert rep.peak_kv <= rep.kv_capacity
+
+
+def test_conservation_with_preemption_and_drain():
+    # tight KV forces preemption while the fleet is also draining down
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+    reqs = _wl(num_requests=40, qps=80.0,
+               prompt=LengthDist("lognormal", 128, 0.5, lo=16, hi=512),
+               output=LengthDist("lognormal", 64, 0.5, lo=8, hi=256)).generate()
+    cap = 3.0 * max(cost.kv_bytes(r.prompt + r.output) for r in reqs)
+    sc = SchedConfig(slots=8, kv_capacity=cap)
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=3,
+                          interval=0.5, window=2.0, target_qps_per_replica=15.0,
+                          warmup=0.3)
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"] * 2, sched=sc),
+                            autoscale=asc)
+    assert sorted(r.rid for r in cres.records) == list(range(40))
+    assert sum(r.preemptions for r in cres.replica_results) > 0
+
+
+# ----------------------------------------------------------- fleet dynamics
+def _burst_then_quiet(n_burst=40, quiet_at=30.0):
+    reqs = [SimRequest(i, 0.02 * i, 96, 16) for i in range(n_burst)]
+    reqs.append(SimRequest(n_burst, quiet_at, 96, 4))  # lone straggler
+    return reqs
+
+
+def test_scale_up_waits_for_warmup():
+    # new replicas take no traffic before `ready`; their first admission
+    # happens at or after the warmup completes
+    reqs = _burst_then_quiet()
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=4,
+                          interval=0.25, window=1.0, target_qps_per_replica=5.0,
+                          warmup=2.0)
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"]), autoscale=asc)
+    adds = [ev for ev in cres.scale_events if ev["action"] == "add"]
+    assert adds, "burst must trigger scale-up"
+    for ev in adds:
+        assert ev["ready"] == pytest.approx(ev["t"] + 2.0)
+        recs = cres.replica_results[ev["replica"]].records
+        for rec in recs:
+            assert rec.admitted >= ev["ready"]
+
+
+def test_warmup_priced_from_weight_bytes():
+    cost = ServingCostModel(CFG, H100_SXM)
+    asc = AutoscaleConfig(host_bw=64e9)
+    assert asc.warmup_seconds(cost) == pytest.approx(cost.weight_bytes / 64e9)
+    # a tp=2 replica loads half the bytes per device -> half the warmup
+    cost2 = ServingCostModel(CFG, H100_SXM, tp=2)
+    assert asc.warmup_seconds(cost2) == pytest.approx(
+        asc.warmup_seconds(cost) / 2)
+    assert AutoscaleConfig(warmup=7.5).warmup_seconds(cost) == 7.5
+
+
+def test_scale_down_drains_gracefully():
+    # after the burst the fleet shrinks; drained replicas stop billing
+    # before the run ends and never abandon admitted work
+    reqs = _burst_then_quiet()
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=4,
+                          interval=0.25, window=1.0, target_qps_per_replica=5.0,
+                          warmup=0.25)
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"]), autoscale=asc)
+    drains = [ev for ev in cres.scale_events if ev["action"] == "drain"]
+    assert drains, "quiet tail must trigger scale-down"
+    end = max(e for _, e in cres.replica_spans)
+    drained = {ev["replica"] for ev in drains}
+    for i in drained:
+        s, e = cres.replica_spans[i]
+        assert e < end  # billing stopped early
+        for rec in cres.replica_results[i].records:
+            assert rec.finish >= 0  # nothing abandoned
+    assert sorted(r.rid for r in cres.records) == [r.rid for r in reqs]
+    # conservation of billing: hours equal the span sum, peak bounded
+    assert cres.replica_hours == pytest.approx(
+        sum(e - s for s, e in cres.replica_spans) / 3600.0)
+    assert 1 <= cres.peak_replicas <= 4
+
+
+def test_no_phantom_spawn_after_work_finishes():
+    # the rate signal's rolling window outlives the trace: a control tick
+    # firing after the last request completed must not spawn a replica
+    # that never serves (it would bill a negative/garbage span)
+    reqs = _wl(num_requests=60, qps=40.0, arrival="poisson").generate()
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=4,
+                          interval=5.0, window=15.0,
+                          target_qps_per_replica=8.0, warmup=1.0)
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"]), autoscale=asc)
+    assert all(e >= s for s, e in cres.replica_spans)
+    assert cres.replica_hours >= 0.0
+    prov = provisioning_summary(cres)
+    assert prov["cost_usd"] >= 0.0 and prov["savings_frac"] <= 1.0
+    # every spawned replica either served something or was billed a
+    # non-negative warmup stub — none appear after the run went idle
+    last_finish = max(r.finish for r in cres.records)
+    for ev in cres.scale_events:
+        if ev["action"] == "add":
+            assert ev["t"] <= last_finish
+
+
+def test_provisioning_summary_beats_static_peak_on_diurnal():
+    # the acceptance headline: SLO met with measurably fewer replica-hours
+    wl = _wl(num_requests=400, qps=20.0, diurnal_period=40.0,
+             prompt=LengthDist("lognormal", 256, 0.4, lo=16, hi=2048),
+             output=LengthDist("lognormal", 64, 0.4, lo=4, hi=512))
+    reqs = wl.generate()
+    cache = {}
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=5,
+                          interval=1.5, window=5.0, target_qps_per_replica=8.0)
+    dyn = simulate_cluster(reqs, CFG, _spec(["mixed"] * 2), autoscale=asc,
+                           _cost_cache=cache)
+    s = summarize_cluster(dyn, slo_ttft=2.0)
+    prov = provisioning_summary(dyn)
+    assert s["goodput_frac"] >= 0.9  # SLO substantially met
+    assert prov["replica_hours"] < 0.9 * prov["replica_hours_static_peak"]
+    assert prov["cost_usd"] < prov["cost_usd_static_peak"]
+    assert 0.0 < prov["savings_frac"] < 1.0
+
+
+# ------------------------------------------------------------ load shedding
+def test_shedding_bounds_depth_and_drops_after_retries():
+    reqs = [SimRequest(i, 0.0, 96, 16) for i in range(30)]
+    spec = _spec(["mixed"], shed_depth=5, retry_after=0.1, max_retries=0)
+    cres = simulate_cluster(reqs, CFG, spec)
+    assert len(cres.shed) == 25  # depth 5, 30 simultaneous arrivals
+    assert cres.retries == 0
+    assert len(cres.records) == 5
+    s = summarize_cluster(cres)
+    assert s["shed"] == 25 and s["shed_frac"] == pytest.approx(25 / 30)
+
+
+def test_retries_can_succeed_after_backoff():
+    # one slow burst: retried arrivals land once the queue drains below the
+    # threshold, and their TTFT includes the backoff they paid
+    reqs = [SimRequest(i, 0.0, 96, 8) for i in range(8)]
+    spec = _spec(["mixed"], shed_depth=6, retry_after=0.5, max_retries=8)
+    cres = simulate_cluster(reqs, CFG, spec)
+    assert cres.retries > 0
+    assert len(cres.records) == 8 and not cres.shed  # all eventually served
+    retried = [r for r in cres.records if r.admitted - r.arrival >= 0.5]
+    assert retried
+    assert all(r.first_token >= r.arrival + 0.5 for r in retried)
+
+
+def test_shed_disabled_by_default():
+    reqs = [SimRequest(i, 0.0, 96, 8) for i in range(30)]
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"]))
+    assert not cres.shed and cres.retries == 0
+    assert len(cres.records) == 30
+
+
+# ------------------------------------------------------------------ signals
+def test_autoscaler_rate_tracking_and_clamping():
+    asc = AutoscaleConfig(policy="rate", min_replicas=2, max_replicas=5,
+                          interval=1.0, window=10.0, target_qps_per_replica=4.0)
+    sc = Autoscaler(asc)
+    for i in range(100):
+        sc.observe_arrival(i * 0.1)  # 10 qps over [0, 10)
+    assert sc.observed_rate(10.0) == pytest.approx(10.0, rel=0.05)
+    assert sc.desired(10.0, provisioned=2) == 3  # ceil(10/4)
+    for i in range(400):
+        sc.observe_arrival(10.0 + i * 0.01)  # 100 qps burst
+    assert sc.desired(14.0, provisioned=3) == 5  # clamped at max
+    assert sc.desired(60.0, provisioned=5) == 2  # window empty -> min
+
+
+def test_autoscaler_slo_debt_hysteresis():
+    asc = AutoscaleConfig(policy="slo_debt", min_replicas=1, max_replicas=8,
+                          window=10.0, slo_ttft=1.0, debt_hi=0.2, debt_lo=0.05)
+    sc = Autoscaler(asc)
+    for i in range(10):
+        sc.observe_ttft(5.0, ttft=2.0 if i < 3 else 0.1)  # 30% violations
+    assert sc.slo_debt(5.0) == pytest.approx(0.3)
+    assert sc.desired(5.0, provisioned=3) == 4  # above hi -> grow
+    sc2 = Autoscaler(asc)
+    for _ in range(50):
+        sc2.observe_ttft(5.0, ttft=0.1)
+    assert sc2.desired(5.0, provisioned=3) == 2  # below lo -> shrink
+    sc3 = Autoscaler(asc)
+    for i in range(10):
+        sc3.observe_ttft(5.0, ttft=2.0 if i < 1 else 0.1)  # 10%: in band
+    assert sc3.desired(5.0, provisioned=3) == 3
+
+
+def test_slo_debt_signal_includes_shed_retry_backoff():
+    # the debt signal must see the END-TO-END TTFT (backoff included), not
+    # the replica-local wait after re-dispatch — otherwise a fleet in SLO
+    # breach purely from shedding backoff would never scale up
+    reqs = [SimRequest(i, 0.0, 96, 8) for i in range(12)]
+    spec = _spec(["mixed"], shed_depth=4, retry_after=1.0, max_retries=8)
+    asc = AutoscaleConfig(policy="slo_debt", min_replicas=1, max_replicas=4,
+                          interval=0.5, window=10.0, slo_ttft=0.5,
+                          debt_hi=0.05, warmup=0.25)
+    cres = simulate_cluster(reqs, CFG, spec, autoscale=asc)
+    breached = sum(1 for r in cres.records if r.ttft > 0.5)
+    assert breached > 0  # the backoff alone blows the 0.5s deadline
+    assert any(ev["action"] == "add" for ev in cres.scale_events)
+
+
+def test_slo_debt_policy_scales_up_under_violation():
+    reqs = _wl(num_requests=80, qps=60.0, arrival="poisson").generate()
+    asc = AutoscaleConfig(policy="slo_debt", min_replicas=1, max_replicas=4,
+                          interval=0.5, window=3.0, slo_ttft=0.5,
+                          debt_hi=0.1, warmup=0.25)
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"]), autoscale=asc)
+    assert any(ev["action"] == "add" for ev in cres.scale_events)
+    assert sorted(r.rid for r in cres.records) == list(range(80))
+
+
+def test_autoscale_config_validation():
+    for bad in (dict(policy="magic"), dict(min_replicas=0),
+                dict(min_replicas=3, max_replicas=2), dict(interval=0.0),
+                dict(target_qps_per_replica=0.0), dict(warmup=-1.0),
+                dict(debt_lo=0.5, debt_hi=0.1), dict(host_bw=0.0)):
+        with pytest.raises(ValueError):
+            AutoscaleConfig(**bad).validate()
+
+
+def test_cluster_spec_shed_validation():
+    with pytest.raises(ValueError, match="shed_depth"):
+        _spec(["mixed"], shed_depth=0).validate()
+    with pytest.raises(ValueError, match="retry_after"):
+        _spec(["mixed"], shed_depth=2, retry_after=0.0).validate()
+
+
+def test_slo_debt_expires_across_idle_gaps_in_cluster():
+    # an idle replica's own clock stops; dispatch-time view clamping must
+    # let old debt fall out of the rolling window, so a replica that blew
+    # its SLO long ago is forgiven once the window has passed
+    early = [SimRequest(i, 0.0, 256, 32) for i in range(6)]  # overload r0+r1
+    late = [SimRequest(6, 500.0, 64, 2)]  # long idle gap >> debt_window
+    spec = _spec(["mixed"] * 2, router="slo_debt",
+                 router_slo_ttft=1e-6, debt_window=30.0)
+    cres = simulate_cluster(early + late, CFG, spec)
+    # the late request routes by depth (both clean), i.e. to replica 0 —
+    # not away from whichever replica carried the stale violations
+    assert cres.assignments[6][0] == 0
+    assert sorted(r.rid for r in cres.records) == list(range(7))
+
+
+def test_disaggregated_autoscale_rejects_unachievable_bounds():
+    reqs = _wl(num_requests=4).generate()
+    with pytest.raises(ValueError, match="max_replicas >= 2"):
+        simulate_cluster(reqs, CFG, _spec(["prefill", "decode"]),
+                         autoscale=AutoscaleConfig(min_replicas=1,
+                                                   max_replicas=1))
+
+
+# -------------------------------------------------- disaggregated autoscale
+def test_disaggregated_autoscale_keeps_pool_ratio_and_conserves():
+    reqs = _wl(num_requests=60, qps=40.0).generate()
+    asc = AutoscaleConfig(policy="rate", min_replicas=2, max_replicas=6,
+                          interval=0.5, window=2.0, target_qps_per_replica=8.0,
+                          warmup=0.5)
+    cres = simulate_cluster(reqs, CFG, _spec(["prefill", "decode"]),
+                            autoscale=asc)
+    assert sorted(r.rid for r in cres.records) == list(range(60))
+    # both pools always have at least one provisioned member
+    for pool in ("prefill", "decode"):
+        assert any(p == pool for p in cres.replica_pools)
+    # prefill stage + (multi-token) decode stage cover every request
+    multi = [r for r in reqs if r.output > 1]
+    assert cres.xfer_count == len(multi)

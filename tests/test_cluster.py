@@ -19,6 +19,7 @@ from repro.sim import (
 from repro.cluster import (
     ClusterSpec,
     ReplicaSpec,
+    ReplicaView,
     make_router,
     plan_capacity,
     pool_summaries,
@@ -231,6 +232,86 @@ def test_cluster_pool_validation():
         simulate_cluster([], CFG, ClusterSpec(replicas=()))
     with pytest.raises(ValueError, match="unknown router"):
         make_router("random")
+
+
+# ---------------------------------------------------------- router coverage
+def test_affinity_hit_accounting_and_single_token_prompt_cap():
+    router = make_router("affinity", hit_frac=0.9)
+    views = [ReplicaView(i, 0.0, 0, 0, 0.0, 1.0) for i in range(2)]
+    # sessionless requests never hit and never pin
+    assert router.pick(SimRequest(0, 0.0, 64, 2, session=-1), views) == (0, 0)
+    assert (router.hits, router.misses) == (0, 1)
+    # first request of a session pins, follow-ups hit
+    assert router.pick(SimRequest(1, 0.0, 100, 2, session=7), views) == (0, 0)
+    assert (router.hits, router.misses) == (0, 2)
+    idx, cached = router.pick(SimRequest(2, 0.0, 100, 2, session=7), views)
+    assert (idx, cached) == (0, 90)
+    assert (router.hits, router.misses) == (1, 2)
+    # a 1-token prompt can never be fully cached: the final prompt token
+    # must run to produce the first logits -> cached caps at prompt - 1 = 0
+    idx, cached = router.pick(SimRequest(3, 0.0, 1, 2, session=7), views)
+    assert (idx, cached) == (0, 0)
+    assert router.hits == 2  # still counted as a hit (placement followed home)
+    # 2-token prompt at hit_frac=0.9: int(1.8) = 1 <= prompt - 1
+    assert router.pick(SimRequest(4, 0.0, 2, 2, session=7), views) == (0, 1)
+    # a home replica that left the eligible set is a miss and re-pins
+    assert router.pick(SimRequest(5, 0.0, 100, 2, session=7), views[1:])[0] == 1
+    assert router.misses == 3
+
+
+def test_slo_debt_router_feedback_steers_traffic():
+    router = make_router("slo_debt", slo_ttft=1.0, debt_window=100.0)
+    views = [ReplicaView(0, 10.0, 5, 5, 0.0, 1.0),  # deeper queue, clean
+             ReplicaView(1, 10.0, 0, 0, 0.0, 1.0)]  # empty, but indebted
+    # without feedback it degenerates to JSQ: the empty replica wins
+    assert router.pick(SimRequest(0, 10.0, 64, 2), views)[0] == 1
+    router.observe(1, t=9.0, ttft=5.0)  # replica 1 blew its deadline
+    router.observe(0, t=9.0, ttft=0.2)
+    assert router.debt(1, 10.0) == 1.0 and router.debt(0, 10.0) == 0.0
+    assert router.pick(SimRequest(1, 10.0, 64, 2), views)[0] == 0
+    # debt expires out of the rolling window
+    assert router.debt(1, 9.0 + 101.0) == 0.0
+
+
+def test_slo_debt_router_in_cluster_is_deterministic():
+    reqs = _wl(num_requests=32, qps=100.0).generate()
+    a = simulate_cluster(reqs, CFG, _spec(["mixed"] * 3, router="slo_debt"))
+    b = simulate_cluster(reqs, CFG, _spec(["mixed"] * 3, router="slo_debt"))
+    assert a.assignments == b.assignments
+    assert sorted(r.rid for r in a.records) == list(range(32))
+
+
+# ---------------------------------------------------------- golden regression
+def _sig6(x: float) -> float:
+    return float(f"{x:.6g}")
+
+
+def test_golden_summary_metrics_pinned():
+    # fixed-seed run with metrics pinned to 6 significant figures: catches
+    # silent cost-model/scheduler drift that behavioral tests cannot see.
+    # If a deliberate model change moves these, re-pin them in the same PR
+    # and say why in the commit message.
+    reqs = _wl().generate()
+    golden = {
+        ("mixed", "mixed"): dict(
+            ttft_p50=0.032202, ttft_p95=0.0527687,
+            tpot_p50=0.0137339, tpot_p95=0.0167422,
+            e2e_mean=0.37305, tokens_per_s=574.404,
+            goodput_frac=1.0, makespan_s=1.06023,
+            peak_kv=168919000.0, xfer_gb=0.0),
+        ("prefill", "decode"): dict(
+            ttft_p50=0.01491, ttft_p95=0.0290749,
+            tpot_p50=0.0135294, tpot_p95=0.0192364,
+            e2e_mean=0.360331, tokens_per_s=561.169,
+            goodput_frac=1.0, makespan_s=1.08523,
+            peak_kv=194806000.0, xfer_gb=0.410092),
+    }
+    for pools, want in golden.items():
+        cres = simulate_cluster(reqs, CFG, _spec(list(pools)))
+        s = summarize_cluster(cres, slo_ttft=2.0, slo_tpot=0.05)
+        got = {k: _sig6(s[k]) for k in want if k != "peak_kv"}
+        got["peak_kv"] = _sig6(max(r.peak_kv for r in cres.replica_results))
+        assert got == want, f"golden drift for pools={pools}"
 
 
 # ------------------------------------------------------------------- planner

@@ -12,6 +12,9 @@ import jax
 from repro.configs import get_config
 from repro.models.transformer import Model
 
+# JAX compile-heavy: excluded from the fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 CASES = [
     "qwen3_14b",  # GQA + qk_norm
     "h2o_danube_1p8b",  # SWA ring buffer

@@ -13,6 +13,9 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_residual
 from repro.kernels.rmsnorm.ref import rmsnorm_ref, rmsnorm_residual_ref
 
+# JAX compile-heavy: excluded from the fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
 
 

@@ -14,6 +14,9 @@ from repro.configs import get_config
 from repro.models.moe import apply_moe, apply_moe_dense_reference, capacity, moe_defs
 from repro.models.params import init_params
 
+# JAX compile-heavy: excluded from the fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 
 def _setup(E=8, k=2, cf=8.0, d=32, ff=16, shared=0, dense_res=False):
     base = get_config("deepseek_moe_16b").reduced()

@@ -12,6 +12,7 @@ from repro.core.parallelism import Mapping
 from repro.core.paper_data import GPT_CONFIGS
 from repro.sim import (
     LengthDist,
+    ReplicaSim,
     SchedConfig,
     ServingCostModel,
     SimRequest,
@@ -61,6 +62,95 @@ def test_lognormal_lengths_clamped_and_mean():
         np.random.default_rng(0), 4000)
     assert xs.min() >= 10 and xs.max() <= 400
     assert np.mean(xs) == pytest.approx(100, rel=0.1)
+
+
+def test_diurnal_arrivals_track_envelope():
+    # thinning must concentrate arrivals where the envelope peaks: compare
+    # arrival counts in the high vs low half-cycle of one compressed day
+    wl = _wl(arrival="diurnal", num_requests=2000, qps=20.0,
+             diurnal_period=100.0, diurnal_amp=0.9)
+    reqs = wl.generate()
+    assert all(b.arrival >= a.arrival for a, b in zip(reqs, reqs[1:]))
+    assert wl.generate() == reqs  # deterministic per seed
+    hi = sum(1 for r in reqs if (r.arrival % 100.0) < 50.0)  # sin > 0 half
+    lo = sum(1 for r in reqs if 50.0 <= (r.arrival % 100.0))
+    assert hi > 2 * lo
+    # envelope accessor matches the analytic form
+    assert wl.rate_at(25.0) == pytest.approx(20.0 * 1.9)  # peak (sin = 1)
+    assert wl.rate_at(75.0) == pytest.approx(20.0 * 0.1)  # trough (sin = -1)
+    assert _wl().rate_at(123.0) == 50.0  # constant-rate specs: just qps
+
+
+def test_diurnal_mean_rate_over_full_cycles():
+    # over whole periods the thinned process keeps the configured mean qps
+    wl = _wl(arrival="diurnal", num_requests=4000, qps=40.0,
+             diurnal_period=10.0, diurnal_amp=0.8)
+    reqs = wl.generate()
+    span = reqs[-1].arrival
+    cycles = int(span / 10.0)
+    n_whole = sum(1 for r in reqs if r.arrival <= cycles * 10.0)
+    assert n_whole / (cycles * 10.0) == pytest.approx(40.0, rel=0.1)
+
+
+def test_diurnal_validation():
+    with pytest.raises(ValueError, match="diurnal_amp"):
+        _wl(arrival="diurnal", diurnal_amp=1.5).generate()
+    with pytest.raises(ValueError, match="diurnal_period"):
+        _wl(arrival="diurnal", diurnal_period=0.0).generate()
+
+
+def test_rate_envelope_replay(tmp_path):
+    p = tmp_path / "rates.jsonl"
+    p.write_text(
+        '{"t": 0.0, "qps": 50.0}\n'
+        '{"time": 10.0, "rate": 50.0}\n'  # aliases accepted
+        '{"t": 10.0001, "qps": 0.5}\n'
+        '{"t": 30.0, "qps": 0.5}\n'
+    )
+    wl = _wl(arrival="envelope", rate_path=str(p), num_requests=400)
+    reqs = wl.generate()
+    assert all(b.arrival >= a.arrival for a, b in zip(reqs, reqs[1:]))
+    assert wl.rate_at(5.0) == pytest.approx(50.0)
+    assert wl.rate_at(20.0) == pytest.approx(0.5)
+    early = sum(1 for r in reqs if r.arrival <= 10.0)
+    # the step down by 100x must show up as a step down in arrival density
+    in_tail = sum(1 for r in reqs if 10.0 < r.arrival <= 30.0)
+    assert early > 10 * max(in_tail, 1)
+    # held constant beyond the last breakpoint: still generates
+    assert len(reqs) == 400
+
+
+def test_rate_envelope_validation(tmp_path):
+    with pytest.raises(ValueError, match="rate_path"):
+        _wl(arrival="envelope").generate()
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("\n")
+    with pytest.raises(ValueError, match="empty"):
+        _wl(arrival="envelope", rate_path=str(empty)).generate()
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"t": 0.0}\n')
+    with pytest.raises(ValueError, match="t/qps"):
+        _wl(arrival="envelope", rate_path=str(bad)).generate()
+    neg = tmp_path / "neg.jsonl"
+    neg.write_text('{"t": 0.0, "qps": -1.0}\n')
+    with pytest.raises(ValueError, match="negative"):
+        _wl(arrival="envelope", rate_path=str(neg)).generate()
+    # a zero TAIL is held forever -> generation could never finish; a zero
+    # rate inside the envelope is fine (thinning skips the quiet valley)
+    tail0 = tmp_path / "tail0.jsonl"
+    tail0.write_text('{"t": 0.0, "qps": 20.0}\n{"t": 1.0, "qps": 0.0}\n')
+    with pytest.raises(ValueError, match="ends at rate 0"):
+        _wl(arrival="envelope", rate_path=str(tail0)).generate()
+    valley = tmp_path / "valley.jsonl"
+    valley.write_text('{"t": 0.0, "qps": 20.0}\n{"t": 1.0, "qps": 0.0}\n'
+                      '{"t": 2.0, "qps": 20.0}\n')
+    reqs = _wl(arrival="envelope", rate_path=str(valley),
+               num_requests=50).generate()
+    assert len(reqs) == 50
+    ok = tmp_path / "ok.jsonl"
+    ok.write_text('{"t": 0.0, "qps": 8.0}\n')
+    with pytest.raises(ValueError, match="substreams"):
+        _wl(arrival="envelope", rate_path=str(ok)).substreams(2)
 
 
 def test_trace_replay(tmp_path):
@@ -271,6 +361,66 @@ def test_edf_improves_tight_class_goodput():
     edf = simulate(reqs, _cost(), SchedConfig(slots=2, admission="edf"))
     mean = lambda res: np.mean([r.ttft for r in res.records if r.rid in tight])
     assert mean(edf) <= mean(fcfs) + 1e-9
+
+
+def test_edf_equal_deadline_tie_break_deterministic():
+    # equal slo_ttft and equal arrivals: EDF's (deadline, arrival, rid) key
+    # falls back to rid order — simultaneous same-class requests admit FCFS,
+    # identically on every run
+    reqs = [SimRequest(i, 0.0, 64, 4, slo_ttft=1.0) for i in range(6)]
+    runs = [simulate(reqs, _cost(), SchedConfig(policy="continuous", slots=2,
+                                                admission="edf"))
+            for _ in range(2)]
+    assert runs[0].admit_order == runs[1].admit_order == list(range(6))
+    assert [(r.first_token, r.finish) for r in runs[0].records] == \
+        [(r.first_token, r.finish) for r in runs[1].records]
+    # same deadline from different (arrival, slo) pairs: earlier arrival wins
+    mixed = [SimRequest(0, 0.5, 64, 4, slo_ttft=1.0),
+             SimRequest(1, 0.0, 64, 4, slo_ttft=1.5)]
+    res = simulate(mixed, _cost(), SchedConfig(policy="continuous", slots=1,
+                                               admission="edf"))
+    assert res.admit_order == [1, 0]
+
+
+# ------------------------------------------------------------ pending eviction
+def test_evict_pending_returns_only_untouched_requests():
+    # graceful-drain contract: queued-never-admitted requests come back out
+    # (records withdrawn), while admitted/preempted work stays put
+    cost = _cost()
+    sim = ReplicaSim(cost, SchedConfig(policy="continuous", slots=1))
+    sim.push(SimRequest(0, 0.0, 64, 8))
+    sim.push(SimRequest(1, 0.0, 64, 4))
+    sim.push(SimRequest(2, 0.0, 64, 4))
+    sim.step()  # admits rid 0 into the single slot; 1-2 stay pending
+    evicted = sim.evict_pending()
+    assert [r.rid for r in evicted] == [1, 2]
+    assert {r.rid for r in sim.res.records} == {0}
+    done = sim.run()
+    assert [r.rid for r in done] == [0]
+    # evicted rids were fully withdrawn: re-pushing them is legal
+    sim.push(SimRequest(1, 0.0, 64, 4))
+    assert sorted(r.rid for r in sim.run()) == [1]
+
+
+def test_evict_pending_keeps_preempted_requests():
+    # a preempted request (KV dropped, tokens already emitted) is in-flight
+    # work, not an untouched arrival: drains must finish it locally
+    cost = _cost()
+    cap = 2.5 * cost.kv_bytes(128 + 64)
+    sim = ReplicaSim(cost, SchedConfig(policy="continuous", slots=8,
+                                       kv_capacity=cap))
+    for i in range(6):
+        sim.push(SimRequest(i, 0.0, 128, 64))
+    while sim.res.preemptions == 0 and sim.has_work:
+        sim.step()
+    assert sim.res.preemptions > 0
+    evicted = sim.evict_pending()
+    # whatever stayed queued was already touched (admitted at least once)
+    assert all(r.rec.admitted >= 0 for r in sim._pending)
+    done_rids = {r.rid for r in sim.res.records}
+    assert done_rids | {r.rid for r in evicted} == set(range(6))
+    sim.run()
+    assert all(r.finish >= 0 for r in sim.res.records)
 
 
 def test_unknown_admission_rejected():

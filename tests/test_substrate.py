@@ -23,6 +23,9 @@ from repro.train.optimizer import (
     lr_schedule,
 )
 
+# JAX compile-heavy: excluded from the fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 
 # ------------------------------------------------------------------ optimizer
 def _quad_params():

@@ -13,6 +13,9 @@ from repro.models.transformer import Model
 from repro.serve.engine import Request, ServeEngine
 from repro.train.trainer import Trainer
 
+# JAX compile-heavy: excluded from the fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 
 def test_training_improves_loss(tmp_path):
     cfg = get_config("qwen3-14b").reduced(num_layers=2, d_model=128, d_ff=256)
