@@ -1,9 +1,13 @@
 """Autoscaling suite: dynamic fleet vs static peak provisioning on a
-diurnal trace, the rate vs slo_debt policies, load shedding under a
-burst, and the pinned-bounds parity contract with the static cluster.
-Rows follow the harness convention (name, us_per_call, derived)."""
+diurnal trace, the reactive (rate / slo_debt) vs predictive (M/G/1
+envelope) policies, pool-aware prefill/decode scaling vs the template
+ratio, load shedding under a burst, and the pinned-bounds parity
+contract with the static cluster. Rows follow the harness convention
+(name, us_per_call, derived)."""
 
 from __future__ import annotations
+
+from dataclasses import replace
 
 from repro.configs import get_config
 from repro.sim import LengthDist, SchedConfig, Workload
@@ -12,6 +16,7 @@ from repro.cluster import (
     ClusterSpec,
     ReplicaSpec,
     provisioning_summary,
+    seed_predictive,
     simulate_cluster,
     summarize_cluster,
 )
@@ -40,11 +45,13 @@ def bench_autoscale():
     # static peak fleet vs the autoscaled fleet on the same diurnal stream
     peak = simulate_cluster(reqs, cfg, _spec(5), _cost_cache=cache)
     s_peak = summarize_cluster(peak, **SLO)
-    for policy in ("rate", "slo_debt"):
+    for policy in ("rate", "slo_debt", "predictive"):
         asc = AutoscaleConfig(policy=policy, min_replicas=1, max_replicas=5,
                               interval=1.0, window=4.0,
                               target_qps_per_replica=8.0, slo_ttft=2.0,
                               warmup=1.0)
+        if policy == "predictive":
+            asc = seed_predictive(asc, wl, reqs)
         cres = simulate_cluster(reqs, cfg, _spec(2), autoscale=asc,
                                 _cost_cache=cache)
         s = summarize_cluster(cres, **SLO)
@@ -64,6 +71,37 @@ def bench_autoscale():
         s_peak["e2e_p50"] * 1e6,
         f"goodput={s_peak['goodput_frac']:.2f}"
         f";repl_s={peak.replica_hours * 3600:.0f}",
+    ))
+
+    # pool-aware disaggregated scaling on a prefill-heavy stream: prefill
+    # scales on admission wait, decode on KV + TPOT pressure
+    wl_pf = Workload(
+        name="prefill-heavy", qps=6.0, num_requests=180, arrival="diurnal",
+        diurnal_period=30.0, diurnal_amp=0.8,
+        prompt=LengthDist("lognormal", 2048, 0.3, lo=256, hi=6144),
+        output=LengthDist("lognormal", 16, 0.4, lo=2, hi=64), seed=0,
+    )
+    reqs_pf = wl_pf.generate()
+    disagg = ClusterSpec(replicas=tuple(
+        ReplicaSpec(pool=p, sched=SchedConfig(slots=8), ctx_quantum=32)
+        for p in ("prefill", "decode")))
+    base = AutoscaleConfig(min_replicas=1, max_replicas=6, interval=1.0,
+                           window=3.0, warmup=0.5)
+    pool_asc = {"prefill": seed_predictive(base, wl_pf, reqs_pf),
+                "decode": replace(base, policy="kv_tpot")}
+    cres = simulate_cluster(reqs_pf, cfg, disagg, autoscale=pool_asc,
+                            _cost_cache=cache)
+    s = summarize_cluster(cres, **SLO)
+    prov = provisioning_summary(cres)
+    pool_s = ";".join(
+        f"{p}_repl_s={v['replica_hours'] * 3600:.0f}"
+        for p, v in prov["pools"].items())
+    rows.append((
+        "autoscale/pool-aware-disagg",
+        s["e2e_p50"] * 1e6,
+        f"goodput={s['goodput_frac']:.2f}"
+        f";repl_s={prov['replica_hours'] * 3600:.0f};{pool_s}"
+        f";events={s['scale_events']}",
     ))
 
     # load shedding bounds queueing when the fleet cannot grow

@@ -4,26 +4,54 @@ microbenches. Usage: PYTHONPATH=src python -m benchmarks.run [names...]"""
 
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="python -m benchmarks.run",
+                                description=__doc__)
+    p.add_argument("suites", nargs="*", metavar="suite",
+                   help="suite names to run (default: all): paper tables, "
+                        "roofline, serving, cluster, autoscale, and "
+                        "'kernels' (which additionally JIT-compiles the "
+                        "jax/pallas kernels; it is imported lazily so the "
+                        "other suites don't pay for it)")
+    p.add_argument("--list", action="store_true", dest="list_suites",
+                   help="print the available suite names and exit")
+    return p
+
+
+def _bench_kernels():
+    # lazy: pulls in the whole jax/pallas kernel stack, which the
+    # analytical suites (and --list) must not pay for
+    from benchmarks.kernels_bench import bench_kernels
+    return bench_kernels()
+
+
+def _suites() -> dict:
     from benchmarks.autoscale_bench import bench_autoscale
     from benchmarks.cluster_bench import bench_cluster
-    from benchmarks.kernels_bench import bench_kernels
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline import bench_roofline
     from benchmarks.serving_bench import bench_serving
 
     suites = dict(ALL)
     suites["roofline"] = bench_roofline
-    suites["kernels"] = bench_kernels
+    suites["kernels"] = _bench_kernels
     suites["serving"] = bench_serving
     suites["cluster"] = bench_cluster
     suites["autoscale"] = bench_autoscale
+    return suites
 
-    wanted = sys.argv[1:] or list(suites)
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
+    suites = _suites()
+    if args.list_suites:
+        print("\n".join(suites))
+        return
+    wanted = args.suites or list(suites)
     print("name,us_per_call,derived")
     failures = 0
     for name in wanted:

@@ -15,6 +15,13 @@ replica-hours, which is the entire point of scaling with the sun. The
 run also prints the scale-event timeline against the offered rate so the
 warmup lag behind the ramp is visible.
 
+A third run caps the fleet BELOW the peak and sheds the overflow,
+pricing each dropped request at `SHED_COST_USD` through
+`provisioning_summary(..., shed_cost_usd=)`: the replica-hour bill
+shrinks but the total (provisioning + shed) bill shows whether dropping
+users was actually cheaper than provisioning for them — the explicit
+shedding-vs-overprovisioning trade.
+
 Runs in seconds on CPU: every engine iteration is priced analytically.
 """
 
@@ -32,6 +39,7 @@ from repro.cluster import (
 CFG = get_config("qwen3_14b")
 SLO_TTFT = 2.0
 PEAK_FLEET = 5  # sized for the envelope peak: ~38 qps / 8 qps-per-replica
+SHED_COST_USD = 0.002  # $ a dropped request costs (lost revenue / credit)
 
 wl = Workload(
     name="diurnal-chat", qps=20.0, num_requests=900, arrival="diurnal",
@@ -43,10 +51,10 @@ reqs = wl.generate()
 sched = SchedConfig(policy="continuous", slots=8)
 
 
-def fleet(n):
+def fleet(n, **kw):
     return ClusterSpec(replicas=tuple(
         ReplicaSpec(hw="h100", pool="mixed", sched=sched, ctx_quantum=32)
-        for _ in range(n)))
+        for _ in range(n)), **kw)
 
 
 print(f"== {CFG.name}: {len(reqs)} requests, diurnal "
@@ -65,20 +73,44 @@ asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=PEAK_FLEET,
 cres = simulate_cluster(reqs, CFG, fleet(2), autoscale=asc, _cost_cache=cache)
 runs["autoscaled"] = cres
 
+# capped fleet: two replicas short of the peak, shedding the overflow —
+# cheap in replica-hours, but every drop is priced
+capped = AutoscaleConfig(policy="rate", min_replicas=1,
+                         max_replicas=PEAK_FLEET - 2, interval=1.5,
+                         window=5.0, target_qps_per_replica=8.0,
+                         slo_ttft=SLO_TTFT)
+cres = simulate_cluster(
+    reqs, CFG, fleet(2, shed_depth=16, retry_after=0.5, max_retries=2),
+    autoscale=capped, _cost_cache=cache)
+runs["capped+shed"] = cres
+
 for name, cres in runs.items():
     s = summarize_cluster(cres, slo_ttft=SLO_TTFT, slo_tpot=0.05)
-    prov = provisioning_summary(cres)
+    prov = provisioning_summary(cres, shed_cost_usd=SHED_COST_USD)
     print(f"{name:<12} ttft_p95={s['ttft_p95']:.2f}s "
           f"goodput={s['goodput_frac']:.0%} "
           f"replicas(peak)={s['peak_replicas']} "
           f"replica-s={prov['replica_hours'] * 3600:.0f} "
-          f"cost=${prov['cost_usd']:.4f}")
+          f"cost=${prov['cost_usd']:.4f}"
+          + (f" + shed {prov['shed']} x ${SHED_COST_USD} = "
+             f"${prov['cost_usd_total']:.4f} total"
+             if prov["shed"] else ""))
 
 prov = provisioning_summary(runs["autoscaled"])
 print(f"\nautoscaling saved {prov['savings_frac']:.0%} of the static-peak "
       f"bill ({prov['replica_hours'] * 3600:.0f} vs "
       f"{prov['replica_hours_static_peak'] * 3600:.0f} replica-seconds) "
       f"while meeting the {SLO_TTFT:g}s TTFT SLO")
+
+pc = provisioning_summary(runs["capped+shed"], shed_cost_usd=SHED_COST_USD)
+pa = provisioning_summary(runs["autoscaled"], shed_cost_usd=SHED_COST_USD)
+verdict = ("still cheaper" if pc["cost_usd_total"] < pa["cost_usd_total"]
+           else "a false economy")
+print(f"capping at {PEAK_FLEET - 2} replicas shed {pc['shed']} requests: "
+      f"${pc['cost_usd']:.4f} provisioning + ${pc['shed_cost_usd']:.4f} "
+      f"shed = ${pc['cost_usd_total']:.4f} vs the full autoscaler's "
+      f"${pa['cost_usd_total']:.4f} — {verdict} at "
+      f"${SHED_COST_USD}/drop")
 
 print("\nscale events (offered rate at each):")
 for ev in runs["autoscaled"].scale_events:

@@ -1,0 +1,151 @@
+"""Predictive + pool-aware autoscaling vs the reactive baselines.
+
+    PYTHONPATH=src python examples/autoscale_predictive.py
+
+Two studies, both pure analytical simulation (seconds on CPU):
+
+1. PREDICTIVE vs REACTIVE on a diurnal chat trace. The reactive rate
+   policy only sees arrivals that already happened, so every morning
+   ramp costs it warmup + window of SLO debt before capacity lands. The
+   predictive policy feeds the KNOWN rate envelope (`Workload.peak_rate`
+   — the generator's own diurnal closed form) and an M/G/1 wait estimate
+   (service time priced from the serving cost model) into `desired()`,
+   so scale-ups LEAD the ramp by the warmup horizon. Target: predictive
+   spends no more replica-hours than reactive at >= equal goodput.
+
+2. POOL-AWARE vs TEMPLATE-RATIO scaling of a disaggregated fleet on a
+   prefill-heavy trace (long doc-QA prompts, short answers). Fleet-wide
+   autoscaling grows prefill and decode pools in lockstep by the spec's
+   template ratio, so the compute-bound prefill bottleneck drags a train
+   of idle decode replicas with it. Pool-aware scaling
+   (`autoscale={"prefill": ..., "decode": ...}`) sizes each pool on its
+   own signal — the prefill pool on the envelope through the predictive
+   policy, the decode pool on KV occupancy + TPOT debt — and beats the
+   template ratio on both goodput and replica-hours.
+"""
+
+from dataclasses import replace
+
+from repro.configs import get_config
+from repro.sim import LengthDist, SchedConfig, Workload
+from repro.cluster import (
+    AutoscaleConfig,
+    ClusterSpec,
+    ReplicaSpec,
+    provisioning_summary,
+    seed_predictive,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+CFG = get_config("qwen3_14b")
+SLO_TTFT, SLO_TPOT = 2.0, 0.05
+sched = SchedConfig(policy="continuous", slots=8)
+
+
+def fleet(pools):
+    return ClusterSpec(replicas=tuple(
+        ReplicaSpec(hw="h100", pool=p, sched=sched, ctx_quantum=32)
+        for p in pools))
+
+
+def report(name, cres, wl):
+    s = summarize_cluster(cres, slo_ttft=SLO_TTFT, slo_tpot=SLO_TPOT)
+    prov = provisioning_summary(cres)
+    first_add = next((ev for ev in cres.scale_events
+                      if ev["action"] == "add"), None)
+    lead = ""
+    if first_add is not None:
+        lead = (f"  first add t={first_add['t']:.1f}s "
+                f"(rate then {wl.rate_at(first_add['t']):.0f} qps)")
+    print(f"  {name:<11} goodput={s['goodput_frac']:.1%} "
+          f"ttft_p95={s['ttft_p95']:.2f}s "
+          f"replica-s={prov['replica_hours'] * 3600:.0f} "
+          f"peak={prov['peak_replicas']}{lead}")
+    return s, prov
+
+
+# ---------------------------------------------------- 1. predictive vs reactive
+wl = Workload(
+    name="diurnal-chat", qps=20.0, num_requests=900, arrival="diurnal",
+    diurnal_period=45.0, diurnal_amp=0.9,
+    prompt=LengthDist("lognormal", 256, 0.4, lo=16, hi=2048),
+    output=LengthDist("lognormal", 64, 0.4, lo=4, hi=512), seed=0,
+)
+reqs = wl.generate()
+cache: dict = {}
+
+print(f"== 1. predictive vs reactive: {CFG.name}, {len(reqs)} requests, "
+      f"diurnal {wl.qps:g}±{wl.qps * wl.diurnal_amp:g} qps ==")
+
+reactive = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=5,
+                           interval=1.5, window=5.0,
+                           target_qps_per_replica=8.0, slo_ttft=SLO_TTFT)
+predictive = seed_predictive(
+    AutoscaleConfig(min_replicas=1, max_replicas=5, interval=1.5, window=5.0,
+                    slo_ttft=SLO_TTFT),
+    wl, reqs)
+
+runs = {}
+for name, asc in [("reactive", reactive), ("predictive", predictive)]:
+    cres = simulate_cluster(reqs, CFG, fleet(["mixed"] * 2),
+                            autoscale=asc, _cost_cache=cache)
+    runs[name] = report(name, cres, wl)
+
+(s_r, p_r), (s_p, p_p) = runs["reactive"], runs["predictive"]
+assert s_p["goodput_frac"] >= s_r["goodput_frac"], \
+    "predictive must not trade goodput away"
+assert p_p["replica_hours"] <= p_r["replica_hours"], \
+    "predictive must not spend more replica-hours"
+print(f"  -> predictive meets the SLO better "
+      f"({s_p['goodput_frac']:.1%} vs {s_r['goodput_frac']:.1%} goodput, "
+      f"ttft_p95 {s_p['ttft_p95']:.2f}s vs {s_r['ttft_p95']:.2f}s) on "
+      f"{p_r['replica_hours'] * 3600 - p_p['replica_hours'] * 3600:.0f} "
+      f"fewer replica-seconds: the envelope lookahead buys capacity "
+      f"BEFORE the ramp needs it and drops it promptly after the crest.")
+
+# ---------------------------------------------- 2. pool-aware vs template ratio
+wl_pf = Workload(
+    name="doc-qa", qps=6.0, num_requests=400, arrival="diurnal",
+    diurnal_period=45.0, diurnal_amp=0.8,
+    prompt=LengthDist("lognormal", 2048, 0.3, lo=256, hi=6144),
+    output=LengthDist("lognormal", 16, 0.4, lo=2, hi=64), seed=0,
+)
+reqs_pf = wl_pf.generate()
+
+print(f"\n== 2. pool-aware vs template ratio: prefill-heavy doc-QA "
+      f"({wl_pf.prompt.mean:g}-token prompts, {wl_pf.output.mean:g}-token "
+      f"answers) ==")
+
+# fleet-wide scaling splits the desired count by the 1P/1D template ratio
+template = AutoscaleConfig(policy="rate", min_replicas=2, max_replicas=8,
+                           interval=1.0, window=4.0,
+                           target_qps_per_replica=2.0, warmup=0.5)
+# pool-aware: each pool on its own signal and bounds
+base = AutoscaleConfig(min_replicas=1, max_replicas=7, interval=1.0,
+                       window=3.0, warmup=0.5, slo_ttft=SLO_TTFT,
+                       slo_tpot=SLO_TPOT)
+pool_aware = {"prefill": seed_predictive(base, wl_pf, reqs_pf),
+              "decode": replace(base, policy="kv_tpot")}
+
+runs = {}
+for name, asc in [("template", template), ("pool-aware", pool_aware)]:
+    cres = simulate_cluster(reqs_pf, CFG, fleet(["prefill", "decode"]),
+                            autoscale=asc, _cost_cache=cache)
+    runs[name] = report(name, cres, wl_pf)
+    prov = runs[name][1]
+    pools = ", ".join(f"{p}: {v['replica_hours'] * 3600:.0f} replica-s "
+                      f"(peak {v['peak_replicas']})"
+                      for p, v in prov["pools"].items())
+    print(f"              [{pools}]")
+
+(s_t, p_t), (s_a, p_a) = runs["template"], runs["pool-aware"]
+assert s_a["goodput_frac"] >= s_t["goodput_frac"]
+assert p_a["replica_hours"] <= p_t["replica_hours"]
+print(f"  -> the template ratio buys a decode replica for every prefill "
+      f"replica even though decode is idle on this trace; pool-aware "
+      f"scaling holds decode at its floor and spends the budget where "
+      f"the bottleneck is ({s_a['goodput_frac']:.1%} vs "
+      f"{s_t['goodput_frac']:.1%} goodput at "
+      f"{p_t['replica_hours'] * 3600 - p_a['replica_hours'] * 3600:.0f} "
+      f"fewer replica-seconds).")

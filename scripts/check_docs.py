@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs suite.
+
+    python scripts/check_docs.py
+
+Scans README.md and docs/**/*.md for inline markdown links `[text](target)`
+and fails (exit 1) on any RELATIVE link whose target file does not exist
+(anchors are stripped; `http(s)://` and `mailto:` links are skipped — no
+network in CI). Reference-style link definitions `[label]: target` are
+checked the same way.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_targets(text: str):
+    in_code = False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        yield from INLINE.findall(line)
+        yield from REFDEF.findall(line)
+
+
+def check_file(path: Path) -> list[str]:
+    broken = []
+    for target in iter_targets(path.read_text()):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            broken.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+    return broken
+
+
+def main() -> int:
+    files = [REPO / "README.md"] + sorted((REPO / "docs").glob("**/*.md"))
+    broken: list[str] = []
+    for f in files:
+        if f.exists():
+            broken += check_file(f)
+    if broken:
+        print("\n".join(broken), file=sys.stderr)
+        return 1
+    print(f"checked {len(files)} markdown files: all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

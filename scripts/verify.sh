@@ -20,3 +20,16 @@ python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 24 \
     --requests 24 --slots 4 --ctx-quantum 32 --mode colocated \
     --arrival diurnal --diurnal-period 20 --autoscale --max-replicas 3 \
     --scale-interval 1 --target-qps 12
+# predictive + pool-aware autoscaling smokes
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 24 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode colocated \
+    --arrival diurnal --diurnal-period 20 --autoscale \
+    --autoscale-policy predictive --max-replicas 3 --scale-interval 1
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 12 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode disaggregated \
+    --arrival diurnal --diurnal-period 20 --pool-autoscale \
+    --max-replicas 3 --scale-interval 1
+
+# docs: the generated CLI reference must match the parsers; links resolve
+python scripts/gen_cli_docs.py --check
+python scripts/check_docs.py

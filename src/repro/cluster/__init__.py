@@ -17,10 +17,13 @@ actually planned against:
     plan whose SLO attainment clears the bar; `provisioning_summary`
     prices a dynamic fleet's replica-hours against static peak
     provisioning.
-  * `autoscale` — target-tracking replica add/remove (arrival rate or
-    rolling SLO debt) with weight-load warmup, graceful drain, and
-    min/max bounds, driving `simulate_cluster(..., autoscale=)` under
-    diurnal/bursty traces.
+  * `autoscale` — reactive (arrival rate, SLO debt, admission wait, KV +
+    TPOT pressure) and predictive (M/G/1 wait estimate over the known
+    rate-envelope lookahead) replica add/remove with weight-load warmup,
+    graceful drain, and min/max bounds, driving
+    `simulate_cluster(..., autoscale=)` under diurnal/bursty traces —
+    fleet-wide, or per-pool for disaggregated clusters
+    (`autoscale={"prefill": ..., "decode": ...}`).
 
 CLI:
 
@@ -52,6 +55,7 @@ from repro.cluster.planner import (
     plan_capacity,
     provisioning_summary,
     replica_price_per_hr,
+    seed_predictive,
 )
 from repro.cluster.router import ROUTERS, ReplicaView, Router, make_router
 
@@ -73,6 +77,7 @@ __all__ = [
     "pool_summaries",
     "provisioning_summary",
     "replica_price_per_hr",
+    "seed_predictive",
     "simulate_cluster",
     "summarize_cluster",
 ]

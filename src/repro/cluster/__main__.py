@@ -9,14 +9,20 @@ TTFT/TPOT/goodput/SLO-attainment plus the KV-transfer overhead of the
 disaggregated organization. `--hw` accepts a comma-separated list cycled
 across replicas for heterogeneous fleets; `--plan` runs the SLO-driven
 capacity sweep instead of a fixed-size comparison; `--autoscale` makes
-the fleet dynamic (target-tracking replica add/remove with warmup and
-graceful drain — pair with `--arrival diurnal` and `--max-replicas`),
-reporting replica-hours against static peak provisioning.
+the fleet dynamic (replica add/remove with warmup and graceful drain —
+pair with `--arrival diurnal` and `--max-replicas`), reporting
+replica-hours against static peak provisioning.
+`--autoscale-policy predictive` provisions ahead of the known rate
+envelope through an M/G/1 wait estimate (scale-ups lead the ramp by the
+warmup); `--pool-autoscale` scales a disaggregated fleet's prefill and
+decode pools independently on their own signals (admission wait vs
+KV + TPOT pressure) instead of the template ratio.
 """
 
 from __future__ import annotations
 
 import argparse
+from dataclasses import replace
 
 from repro.configs import get_config
 from repro.sim import ADMISSIONS, LengthDist, SchedConfig, Workload
@@ -30,6 +36,7 @@ from repro.cluster import (
     plan_capacity,
     pool_summaries,
     provisioning_summary,
+    seed_predictive,
     simulate_cluster,
     summarize_cluster,
 )
@@ -102,6 +109,23 @@ def build_parser() -> argparse.ArgumentParser:
                    help="rate policy: target qps per replica")
     p.add_argument("--warmup", type=float, default=None,
                    help="replica warmup (s); default prices weight loading")
+    p.add_argument("--lookahead", type=float, default=None,
+                   help="predictive policy: envelope horizon (s); "
+                        "default warmup + interval")
+    p.add_argument("--target-wait", type=float, default=None,
+                   help="predictive policy: M/G/1 wait budget (s); "
+                        "default slo_ttft / 2")
+    p.add_argument("--pool-autoscale", action="store_true",
+                   help="disaggregated only: scale prefill and decode "
+                        "pools independently on their own signals")
+    p.add_argument("--prefill-policy", default="queue_wait",
+                   choices=list(AUTOSCALE_POLICIES),
+                   help="pool-autoscale: prefill pool policy")
+    p.add_argument("--decode-policy", default="kv_tpot",
+                   choices=list(AUTOSCALE_POLICIES),
+                   help="pool-autoscale: decode pool policy")
+    p.add_argument("--shed-cost", type=float, default=0.0,
+                   help="$ per dropped request in the provisioning summary")
     p.add_argument("--shed-depth", type=int, default=None,
                    help="shed arrivals when every replica's depth >= this")
     p.add_argument("--retry-after", type=float, default=0.5)
@@ -142,19 +166,38 @@ def main(argv=None) -> None:
         rate_path=args.rate_path)
     reqs = wl.generate()
     autoscale = None
-    if args.autoscale:
-        autoscale = AutoscaleConfig(
+    if args.autoscale or args.pool_autoscale:
+        base = AutoscaleConfig(
             policy=args.autoscale_policy, min_replicas=args.min_replicas,
             max_replicas=args.max_replicas, interval=args.scale_interval,
             window=args.scale_window, target_qps_per_replica=args.target_qps,
-            slo_ttft=args.slo_ttft, warmup=args.warmup)
+            slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
+            warmup=args.warmup, lookahead=args.lookahead,
+            target_wait=args.target_wait)
+
+        def _pool_cfg(policy: str) -> AutoscaleConfig:
+            asc = replace(base, policy=policy)
+            # the predictive policy needs the generator's rate envelope
+            # and traffic shape; reactive policies are self-contained
+            return seed_predictive(asc, wl, reqs) if policy == "predictive" \
+                else asc
+
+        if args.pool_autoscale:
+            if args.mode != "disaggregated":
+                raise SystemExit(
+                    "--pool-autoscale scales prefill/decode pools "
+                    "independently; pair it with --mode disaggregated")
+            autoscale = {"prefill": _pool_cfg(args.prefill_policy),
+                         "decode": _pool_cfg(args.decode_policy)}
+        else:
+            autoscale = _pool_cfg(args.autoscale_policy)
 
     if args.plan:
         hws = [h.strip() for h in args.hw.split(",") if h.strip()]
         if len(hws) > 1:
             print(f"# note: --plan sweeps homogeneous fleets; using {hws[0]!r} "
                   f"(ignoring {', '.join(hws[1:])})")
-        if args.autoscale or args.shed_depth is not None:
+        if autoscale is not None or args.shed_depth is not None:
             print("# note: --plan sizes STATIC fleets; --autoscale/--shed-* "
                   "flags are ignored by the sweep (drop --plan to run the "
                   "dynamic fleet)")
@@ -239,9 +282,10 @@ def main(argv=None) -> None:
         print(_fmt_row(label, s))
 
     for mode, (spec, cres, s) in results.items():
-        if args.autoscale:
+        dynamic = autoscale is not None
+        if dynamic:
             # a dynamic fleet has no single $/hr: bill the actual spans
-            prov = provisioning_summary(cres)
+            prov = provisioning_summary(cres, shed_cost_usd=args.shed_cost)
             hours = max(cres.makespan / 3600.0, 1e-12)
             price = f"${prov['cost_usd'] / hours:.2f}/hr avg (dynamic)"
         else:
@@ -258,8 +302,10 @@ def main(argv=None) -> None:
               + (f", shed={s['shed']} ({s['shed_frac']:.1%}), "
                  f"retries={s['retries']}"
                  if args.shed_depth is not None else ""))
-        if args.autoscale:
-            print(f"  autoscale [{args.autoscale_policy}]: "
+        if dynamic:
+            label = (f"pool-aware {args.prefill_policy}/{args.decode_policy}"
+                     if args.pool_autoscale else args.autoscale_policy)
+            print(f"  autoscale [{label}]: "
                   f"{s['scale_events']} scale events, "
                   f"peak {s['peak_replicas']} replicas, "
                   f"{prov['replica_hours'] * 3600:.1f} replica-s vs "
@@ -267,6 +313,16 @@ def main(argv=None) -> None:
                   f"(${prov['cost_usd']:.4f} vs "
                   f"${prov['cost_usd_static_peak']:.4f}, "
                   f"{prov['savings_frac']:.0%} saved)")
+            if args.shed_cost > 0:
+                print(f"  shed cost: {prov['shed']} dropped x "
+                      f"${args.shed_cost:.4f} = ${prov['shed_cost_usd']:.4f} "
+                      f"-> total ${prov['cost_usd_total']:.4f}")
+            if args.pool_autoscale:
+                for pool, pp in prov["pools"].items():
+                    print(f"  pool {pool:<8} billing: "
+                          f"{pp['replica_hours'] * 3600:.1f} replica-s, "
+                          f"${pp['cost_usd']:.4f}, "
+                          f"peak {pp['peak_replicas']} replicas")
             for ev in cres.scale_events:
                 print(f"    t={ev['t']:7.2f}s {ev['action']:<7} "
                       f"r{ev['replica']} [{ev['pool']}]"

@@ -24,12 +24,23 @@ Two cluster organizations:
 
 The fleet itself is dynamic when `simulate_cluster(..., autoscale=)` is
 given an `AutoscaleConfig`: a control loop fires every `interval` seconds,
-targets the observed arrival rate or the rolling SLO debt, and replicas
-join (after a weight-loading warmup priced from the cost model) or leave
+evaluates the policy (reactive rate/SLO-debt tracking, or the predictive
+M/G/1 envelope policy — see `repro.cluster.autoscale`), and replicas join
+(after a weight-loading warmup priced from the cost model) or leave
 (graceful drain: no new admissions, in-flight work runs out, untouched
 queued arrivals are re-routed) mid-stream. Per-replica provisioning spans
 are billed so diurnal fleets report replica-hours against the
 static-peak-provisioned fleet that serves the same trace.
+
+Disaggregated fleets can scale their pools INDEPENDENTLY: pass
+`autoscale={"prefill": asc_p, "decode": asc_d}` and each pool runs its
+own control loop on its own signal (prefill on admission-queue wait,
+decode on KV pressure + TPOT debt are the natural pairings) with its own
+bounds and interval, instead of growing both pools by the spec's template
+ratio even when only one is the bottleneck. Handoff routing tolerates
+mid-stream pool-size changes: transfers are routed among the decode
+replicas accepting at the instant the KV arrives, and a draining decode
+replica's queued-but-unstarted handoffs are re-routed to the survivors.
 
 Optionally the cluster sheds load instead of queueing without bound:
 when every eligible replica's depth is at `shed_depth`, the arrival is
@@ -77,13 +88,17 @@ class ReplicaSpec:
     kv_block_tokens: int = 0
 
     def resolve_hw(self) -> HardwareSpec:
+        """The concrete hardware spec (string names are looked up)."""
         return get_hardware(self.hw) if isinstance(self.hw, str) else self.hw
 
     def cost_key(self) -> tuple:
+        """Memoization key: replicas with equal keys share one
+        `ServingCostModel` (and its step-cost memo) across the fleet."""
         return (self.resolve_hw().name, self.tp, self.prec,
                 self.ctx_quantum, self.kv_block_tokens)
 
     def build_cost(self, cfg: ModelConfig) -> ServingCostModel:
+        """Price `cfg` on this replica's hardware/parallelism/precision."""
         return ServingCostModel(cfg, self.resolve_hw(), tp=self.tp, prec=self.prec,
                                 ctx_quantum=self.ctx_quantum,
                                 kv_block_tokens=self.kv_block_tokens)
@@ -105,17 +120,21 @@ class ClusterSpec:
 
     @property
     def disaggregated(self) -> bool:
+        """True when the spec separates prefill and decode pools."""
         return any(r.pool != "mixed" for r in self.replicas)
 
     def pool_indices(self, pool: str) -> list[int]:
+        """Template indices of the replicas declared in `pool`."""
         return [i for i, r in enumerate(self.replicas) if r.pool == pool]
 
     def make_router(self, name: str):
+        """Instantiate a dispatch router with this spec's routing knobs."""
         return make_router(name, hit_frac=self.hit_frac,
                            slo_ttft=self.router_slo_ttft,
                            debt_window=self.debt_window)
 
     def validate(self) -> None:
+        """Raise ValueError on inconsistent topology/shedding settings."""
         if not self.replicas:
             raise ValueError("cluster needs at least one replica")
         for r in self.replicas:
@@ -253,7 +272,7 @@ class _ClusterEngine:
     feedback to the router and autoscaler, drain progress)."""
 
     def __init__(self, spec: ClusterSpec, cfg: ModelConfig,
-                 autoscale: AutoscaleConfig | None, cache: dict):
+                 autoscale: AutoscaleConfig | dict | None, cache: dict):
         self.spec = spec
         self.cfg = cfg
         self.cache = cache
@@ -261,8 +280,6 @@ class _ClusterEngine:
         self.arrival_pool = "prefill" if self.disagg else "mixed"
         self.router = spec.make_router(spec.router)
         self.d_router = spec.make_router(spec.decode_router)
-        self.scaler = Autoscaler(autoscale) if autoscale is not None else None
-        self.asc = autoscale
 
         self.reps: list[_Rep] = []
         for rs in spec.replicas:
@@ -277,6 +294,24 @@ class _ClusterEngine:
         self._templates = {p: [rs for rs in spec.replicas if rs.pool == p]
                            for p in dict.fromkeys(r.pool for r in spec.replicas)}
         self._tmpl_i = {p: 0 for p in self._templates}
+
+        # autoscaling: one fleet-wide scaler (template-ratio split for
+        # disaggregated fleets) or one independent scaler per pool. Each
+        # scaler prices its predictive service time / warmup lookahead
+        # from its own pool's first template replica.
+        self.scaler: Autoscaler | None = None  # fleet-wide mode
+        self.pool_scalers: dict[str, Autoscaler] = {}  # pool-aware mode
+        if isinstance(autoscale, AutoscaleConfig):
+            # the fleet-wide loop sizes the TOTAL count (split by template
+            # ratio for disaggregated fleets), so its predictive server
+            # model is a whole-request "mixed" replica
+            self.scaler = self._make_scaler(autoscale, self.arrival_pool,
+                                            service_pool="mixed")
+        elif autoscale:
+            self.pool_scalers = {pool: self._make_scaler(asc, pool)
+                                 for pool, asc in autoscale.items()}
+        self._signal_scalers = ([self.scaler] if self.scaler is not None
+                                else list(self.pool_scalers.values()))
 
         self.orig: dict[int, SimRequest] = {}
         self.assignments: dict[int, list[int]] = {}
@@ -297,6 +332,20 @@ class _ClusterEngine:
             self.cache[key] = rs.build_cost(self.cfg)
         return self.cache[key]
 
+    def _make_scaler(self, asc: AutoscaleConfig, pool: str,
+                     service_pool: str | None = None) -> Autoscaler:
+        """Build a control loop priced from `pool`'s first template
+        replica; `service_pool` overrides which pool variant the
+        predictive E[S] models (defaults to the pool itself)."""
+        tmpl = self._templates[pool][0]
+        return Autoscaler(asc, cost=self._cost_for(tmpl), sched=tmpl.sched,
+                          pool=service_pool or pool)
+
+    def _asc_for(self, pool: str) -> AutoscaleConfig:
+        if pool in self.pool_scalers:
+            return self.pool_scalers[pool].asc
+        return self.scaler.asc
+
     def _add_rep(self, rs: ReplicaSpec, pool: str, *, started: float,
                  ready: float) -> _Rep:
         cost = self._cost_for(rs)
@@ -310,7 +359,7 @@ class _ClusterEngine:
         tmpls = self._templates[pool]
         rs = tmpls[self._tmpl_i[pool] % len(tmpls)]
         self._tmpl_i[pool] += 1
-        warm = self.scaler.asc.warmup_seconds(self._cost_for(rs))
+        warm = self._asc_for(pool).warmup_seconds(self._cost_for(rs))
         rep = self._add_rep(rs, pool, started=t, ready=t + warm)
         self.scale_events.append(
             {"t": t, "action": "add", "replica": self.reps.index(rep),
@@ -329,6 +378,22 @@ class _ClusterEngine:
         rep.drain_start = t
         self.scale_events.append(
             {"t": t, "action": "drain", "replica": i, "pool": rep.pool})
+        if rep.pool == "decode":
+            # queued-but-unstarted KV handoffs re-route to the surviving
+            # decode replicas; the cache sits on the draining replica, so
+            # the re-route pays a second p2p hop and re-enters the punctual
+            # transfer queue (the decode router picks the target when the
+            # KV lands, so mid-stream pool changes are tolerated)
+            for req in rep.sim.evict_pending(include_staged=True):
+                orig = self.orig[req.rid]
+                nbytes = rep.cost.kv_handoff_bytes(orig.prompt)
+                dt = C.p2p(nbytes, self.xfer_net)
+                heapq.heappush(self.xfers, (t + dt, self.seq, orig))
+                self.seq += 1
+                self.xfer_count += 1
+                self.xfer_bytes += nbytes
+                self.xfer_seconds += dt
+            return
         for req in rep.sim.evict_pending():
             # stage requests (disagg prefill pushes output=1) map back to
             # the original arrival before re-routing
@@ -364,9 +429,23 @@ class _ClusterEngine:
                 break
             self._drain(i, t)
 
+    def _pool_kv_frac(self, pool: str, t: float) -> float:
+        """Mean KV-occupancy fraction over the pool's accepting replicas —
+        the instantaneous half of the `kv_tpot` scaling signal."""
+        fracs = [rep.sim.kv_used / rep.sim.cap
+                 for rep in self.reps
+                 if rep.pool == pool and rep.accepting(t) and rep.sim.cap > 0]
+        return sum(fracs) / len(fracs) if fracs else 0.0
+
     def _tick(self, t: float) -> None:
+        """Fleet-wide control tick: one desired count, split across pools
+        by the spec's template ratio for disaggregated fleets."""
         provisioned = [r for r in self.reps if r.provisioned]
-        want = self.scaler.desired(t, len(provisioned))
+        # KV pressure lives where the cache is resident: the decode pool
+        # on disaggregated fleets (prefill holds KV only transiently)
+        kv_pool = "decode" if self.disagg else self.arrival_pool
+        want = self.scaler.desired(t, len(provisioned),
+                                   kv_frac=self._pool_kv_frac(kv_pool, t))
         if self.disagg:
             base_p = len(self.spec.pool_indices("prefill"))
             base_d = len(self.spec.pool_indices("decode"))
@@ -377,6 +456,15 @@ class _ClusterEngine:
             self._scale_pool("decode", want - want_p, t)
         else:
             self._scale_pool("mixed", want, t)
+
+    def _tick_pool(self, pool: str, t: float) -> None:
+        """Pool-aware control tick: this pool's scaler alone decides this
+        pool's size, on this pool's signals (the other pool is untouched)."""
+        scaler = self.pool_scalers[pool]
+        provisioned = len(self._pool_counts(pool))
+        want = scaler.desired(t, provisioned,
+                              kv_frac=self._pool_kv_frac(pool, t))
+        self._scale_pool(pool, want, t)
 
     # -------------------------------------------------------------- dispatch
     def _dispatch(self, req: SimRequest, t: float, attempt: int) -> None:
@@ -420,6 +508,7 @@ class _ClusterEngine:
     # --------------------------------------------------------------- advance
     def _harvest(self, i: int, done: list[ReqRecord]) -> None:
         rep = self.reps[i]
+        pool_scaler = self.pool_scalers.get(rep.pool) or self.scaler
         for rec in done:
             if rep.pool in ("mixed", "prefill") and rec.first_token >= 0:
                 # end-to-end TTFT, from the ORIGINAL arrival: shed-retry
@@ -428,8 +517,36 @@ class _ClusterEngine:
                 # report instead of the replica-local staged wait
                 ttft = rec.first_token - self.orig[rec.rid].arrival
                 self.router.observe(i, rec.finish, ttft)
-                if self.scaler is not None:
-                    self.scaler.observe_ttft(rec.finish, ttft)
+                for sc in self._signal_scalers:
+                    sc.observe_ttft(rec.finish, ttft)
+            if pool_scaler is not None and rec.admitted >= 0:
+                # pool-local signals: the admission wait a prefill (or
+                # mixed) pool queues prompts behind — end-to-end, so shed
+                # backoff counts — and the stage-local handoff wait on a
+                # decode pool; TPOT debt from any pool that decodes
+                if rep.pool == "decode":
+                    wait = rec.admitted - rec.arrival
+                    # a FLEET-wide queue_wait signal must see only the
+                    # user-facing admission wait; blending near-zero
+                    # handoff waits into the same mean would halve it
+                    feed_wait = rep.pool in self.pool_scalers
+                    # the decode stage's TPOT debt is charged from the
+                    # instant the KV landed: queueing behind a full pool
+                    # stretches the stitched record's inter-token gap, so
+                    # the signal must see it too, not just the post-
+                    # admission decode cadence
+                    if rec.output > 1:
+                        pool_scaler.observe_tpot(
+                            rec.finish,
+                            (rec.finish - rec.arrival) / (rec.output - 1))
+                else:
+                    wait = rec.admitted - self.orig[rec.rid].arrival
+                    feed_wait = True
+                    if rec.output > 1 and rep.pool == "mixed" \
+                            and rec.first_token >= 0:
+                        pool_scaler.observe_tpot(rec.finish, rec.tpot)
+                if feed_wait:
+                    pool_scaler.observe_wait(rec.finish, wait)
             if rep.pool != "prefill":
                 continue
             req = self.orig[rec.rid]
@@ -484,17 +601,24 @@ class _ClusterEngine:
     def run(self, ordered: list[SimRequest]) -> None:
         self.orig = {r.rid: r for r in ordered}
         arrivals = deque(ordered)
-        interval = self.asc.interval if self.asc is not None else _INF
-        next_tick = interval
+        # one tick stream per control loop: the fleet-wide scaler (key
+        # None) or each pool's scaler, on its own interval; at equal times
+        # pools tick in the spec's pool order (deterministic)
+        if self.scaler is not None:
+            intervals: dict = {None: self.scaler.asc.interval}
+        else:
+            intervals = {p: self.pool_scalers[p].asc.interval
+                         for p in self._templates if p in self.pool_scalers}
+        next_tick = dict(intervals)
         while True:
             t_arr = arrivals[0].arrival if arrivals else _INF
             t_rty = self.retry_heap[0][0] if self.retry_heap else _INF
             t_xfr = self.xfers[0][0] if self.xfers else _INF
             # ticks stop once nothing is pending anywhere (else they'd
             # fire forever); pending work keeps the control loop honest
-            t_tck = (next_tick if self.scaler is not None
-                     and (arrivals or self.retry_heap or self.xfers
-                          or self._sim_work) else _INF)
+            pending = bool(arrivals or self.retry_heap or self.xfers
+                           or self._sim_work)
+            t_tck = min(next_tick.values()) if next_tick and pending else _INF
             t_evt = min(t_arr, t_rty, t_xfr, t_tck)
             if t_evt == _INF:
                 if self._sim_work or self.xfers:
@@ -504,8 +628,8 @@ class _ClusterEngine:
             self._advance_all(t_evt)  # handoffs ready <= t_evt dispatch inside
             if t_arr == t_evt:
                 req = arrivals.popleft()
-                if self.scaler is not None:
-                    self.scaler.observe_arrival(req.arrival)
+                for sc in self._signal_scalers:
+                    sc.observe_arrival(req.arrival)
                 self._dispatch(req, req.arrival, attempt=0)
             elif t_rty == t_evt:
                 t, _, attempt, req = heapq.heappop(self.retry_heap)
@@ -514,10 +638,17 @@ class _ClusterEngine:
                 # the advance may have finished the last pending work this
                 # tick was gated on; scaling an idle, finished fleet would
                 # spawn replicas that never serve (and bill phantom spans)
-                if (arrivals or self.retry_heap or self.xfers
-                        or self._sim_work):
-                    self._tick(next_tick)
-                next_tick += interval
+                still_pending = bool(arrivals or self.retry_heap or self.xfers
+                                     or self._sim_work)
+                for key in list(next_tick):
+                    if next_tick[key] != t_evt:
+                        continue
+                    if still_pending:
+                        if key is None:
+                            self._tick(t_evt)
+                        else:
+                            self._tick_pool(key, t_evt)
+                    next_tick[key] += intervals[key]
             # else: the event was a transfer, consumed by the advance
 
     # ----------------------------------------------------------------- result
@@ -571,24 +702,51 @@ class _ClusterEngine:
 
 def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
                      spec: ClusterSpec, *,
-                     autoscale: AutoscaleConfig | None = None,
+                     autoscale: AutoscaleConfig | dict | None = None,
                      _cost_cache: dict | None = None) -> ClusterResult:
     """Co-simulate the cluster over one shared arrival stream.
 
-    With `autoscale`, `spec.replicas` is the fleet at t=0 (already warm)
-    and the control loop adds/drains replicas mid-stream; without it the
-    fleet is fixed, and the result is step-for-step identical to an
-    autoscaled run whose bounds pin the fleet (`min == max == N`).
+    Args:
+        requests: the shared arrival stream (any order; sorted internally
+            by (arrival, rid)).
+        cfg: model config every replica serves.
+        spec: fleet topology, routing, and shedding policy.
+        autoscale: `None` for a fixed fleet; an `AutoscaleConfig` for one
+            fleet-wide control loop (disaggregated fleets split the
+            desired count by the spec's template pool ratio); or a
+            `{pool: AutoscaleConfig}` dict to scale pools INDEPENDENTLY —
+            each listed pool runs its own control loop on its own signals
+            and bounds (pools not listed stay at their template size).
+            With `autoscale`, `spec.replicas` is the fleet at t=0
+            (already warm). A pinned control loop (`min == max == N`)
+            reproduces the static cluster step-for-step — in fleet-wide
+            AND pool-aware mode (regression-tested).
+        _cost_cache: lets sweeps (the capacity planner) share memoized
+            `ServingCostModel`s across many cluster candidates.
 
-    `_cost_cache` lets sweeps (the capacity planner) share memoized
-    `ServingCostModel`s across many cluster candidates."""
+    Returns:
+        `ClusterResult` with stitched cluster-level records, per-replica
+        stage results, billing spans (seconds), and scale events.
+    """
     spec.validate()
-    if autoscale is not None:
+    if isinstance(autoscale, AutoscaleConfig):
         autoscale.validate()
         if spec.disaggregated and autoscale.max_replicas < 2:
             raise ValueError(
                 "disaggregated autoscaling needs max_replicas >= 2 "
                 "(>= 1 prefill AND >= 1 decode replica at all times)")
+    elif autoscale is not None:
+        pools_present = {r.pool for r in spec.replicas}
+        for pool, asc in autoscale.items():
+            if pool not in pools_present:
+                raise ValueError(
+                    f"pool-aware autoscale names pool {pool!r} but the "
+                    f"spec only has {sorted(pools_present)}")
+            if not isinstance(asc, AutoscaleConfig):
+                raise ValueError(
+                    f"pool-aware autoscale values must be AutoscaleConfig, "
+                    f"got {type(asc).__name__} for pool {pool!r}")
+            asc.validate()
     cache = _cost_cache if _cost_cache is not None else {}
     engine = _ClusterEngine(spec, cfg, autoscale, cache)
     engine.run(sorted(requests, key=lambda r: (r.arrival, r.rid)))

@@ -19,8 +19,9 @@ from dataclasses import replace
 
 from repro.configs.base import ModelConfig
 from repro.sim.scheduler import SchedConfig
-from repro.sim.workload import Workload
+from repro.sim.workload import SimRequest, Workload
 
+from repro.cluster.autoscale import AutoscaleConfig
 from repro.cluster.cluster import (
     ClusterSpec,
     ReplicaSpec,
@@ -43,6 +44,8 @@ DEFAULT_PRICE_PER_DEV_HR = {
 
 
 def replica_price_per_hr(rs: ReplicaSpec, table: dict | None = None) -> float:
+    """$/hour to run one replica: the per-device price of its hardware
+    times its tensor-parallel device count."""
     table = table or DEFAULT_PRICE_PER_DEV_HR
     name = (rs.hw if isinstance(rs.hw, str) else rs.hw.name).lower()
     if name not in table:
@@ -53,10 +56,12 @@ def replica_price_per_hr(rs: ReplicaSpec, table: dict | None = None) -> float:
 
 
 def cluster_price_per_hr(spec: ClusterSpec, table: dict | None = None) -> float:
+    """$/hour for the whole (static) fleet: sum of its replica prices."""
     return sum(replica_price_per_hr(rs, table) for rs in spec.replicas)
 
 
-def provisioning_summary(cres, table: dict | None = None) -> dict:
+def provisioning_summary(cres, table: dict | None = None, *,
+                         shed_cost_usd: float = 0.0) -> dict:
     """Price a (possibly dynamic) cluster run's actual provisioning against
     static peak provisioning of the same trace.
 
@@ -64,13 +69,41 @@ def provisioning_summary(cres, table: dict | None = None) -> dict:
     drain tails included); the static-peak counterfactual runs the maximum
     concurrently-provisioned fleet for the whole makespan — what you'd have
     to deploy without an autoscaler to survive the trace's peak. The
-    savings fraction is the autoscaling headline number on diurnal traces."""
+    savings fraction is the autoscaling headline number on diurnal traces.
+
+    Args:
+        cres: a `ClusterResult`.
+        table: $/device-hour price table (default
+            `DEFAULT_PRICE_PER_DEV_HR`).
+        shed_cost_usd: $ each dropped request costs (lost revenue / SLA
+            credit). Nonzero makes the shedding-vs-overprovisioning trade
+            explicit: a fleet that sheds its way to cheap replica-hours
+            pays for it in `shed_cost_usd`, and `cost_usd_total` ranks the
+            two honestly.
+
+    Returns dict keys (all costs in $, hours in replica-hours):
+        replica_hours / replica_hours_static_peak, cost_usd /
+        cost_usd_static_peak, savings_frac, peak_replicas,
+        shed / shed_cost_usd / cost_usd_total, and `pools` — a per-pool
+        breakdown {pool: {replica_hours, cost_usd, peak_replicas}} so
+        pool-aware autoscaling bills prefill and decode separately."""
     prices = [replica_price_per_hr(rs, table) for rs in cres.replica_specs]
     span = cres.makespan
     cost = sum(p * (e - s) / 3600.0
                for p, (s, e) in zip(prices, cres.replica_spans))
     # static peak $: the max concurrent price rate, held for the whole span
     static_cost = peak_over_spans(cres.replica_spans, prices) * span / 3600.0
+    shed_cost = len(cres.shed) * shed_cost_usd
+    pools: dict = {}
+    for pool in dict.fromkeys(cres.replica_pools):  # stable order
+        idxs = [i for i, p in enumerate(cres.replica_pools) if p == pool]
+        spans = [cres.replica_spans[i] for i in idxs]
+        pools[pool] = {
+            "replica_hours": sum(e - s for s, e in spans) / 3600.0,
+            "cost_usd": sum(prices[i] * (e - s) / 3600.0
+                            for i, (s, e) in zip(idxs, spans)),
+            "peak_replicas": int(peak_over_spans(spans)),
+        }
     return {
         "replica_hours": cres.replica_hours,
         "replica_hours_static_peak": cres.replica_hours_static_peak,
@@ -78,7 +111,34 @@ def provisioning_summary(cres, table: dict | None = None) -> dict:
         "cost_usd_static_peak": static_cost,
         "savings_frac": 1.0 - cost / static_cost if static_cost > 0 else 0.0,
         "peak_replicas": cres.peak_replicas,
+        "shed": len(cres.shed),
+        "shed_cost_usd": shed_cost,
+        "cost_usd_total": cost + shed_cost,
+        "pools": pools,
     }
+
+
+def seed_predictive(asc: AutoscaleConfig, workload: Workload,
+                    requests: list[SimRequest] | None = None
+                    ) -> AutoscaleConfig:
+    """Seed the predictive policy's envelope and traffic shape from a
+    workload spec — the planner-side bridge between what the generator
+    KNOWS it will offer and what the control loop provisions for.
+
+    Returns a copy of `asc` with `policy="predictive"`,
+    `envelope=workload.peak_rate` (the diurnal closed form or the JSONL
+    replay's piecewise-linear lookahead), and `mean_prompt`/`mean_output`
+    (tokens) taken from the generated `requests` when given (exact, and
+    the only option for trace replays) or from the spec's length
+    distributions otherwise."""
+    if requests:
+        mean_prompt = sum(r.prompt for r in requests) / len(requests)
+        mean_output = sum(r.output for r in requests) / len(requests)
+    else:
+        mean_prompt, mean_output = workload.prompt.mean, workload.output.mean
+    return replace(asc, policy="predictive", envelope=workload.peak_rate,
+                   mean_prompt=float(mean_prompt),
+                   mean_output=float(mean_output))
 
 
 def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,

@@ -34,28 +34,38 @@ ROUTERS = ("round_robin", "jsq", "least_kv", "affinity", "slo_debt")
 
 @dataclass(frozen=True)
 class ReplicaView:
-    """Read-only snapshot of one replica, as the router observes it."""
+    """Read-only snapshot of one replica, as the router observes it at
+    the dispatch instant."""
 
     idx: int  # global replica index
-    now: float
+    now: float  # view clock (s): max(replica clock, dispatch time)
     queue_len: int  # requests queued, not yet admitted
     live: int  # sequences holding slots
-    kv_used: float  # bytes currently materialized
-    kv_capacity: float
+    kv_used: float  # KV bytes currently materialized on the replica
+    kv_capacity: float  # KV budget (bytes)
 
     @property
     def depth(self) -> int:
+        """Total requests on the replica (queued + live) — the JSQ load."""
         return self.queue_len + self.live
 
     @property
     def kv_frac(self) -> float:
+        """KV occupancy fraction in [0, 1] (0 for an empty/∞ budget)."""
         return self.kv_used / self.kv_capacity if self.kv_capacity > 0 else 0.0
 
 
 class Router:
-    """`pick()` returns (chosen replica idx, prefix-cached prompt tokens).
-    `observe()` is the cluster engine's outcome feedback channel (completed
-    requests' TTFTs); stateless policies ignore it."""
+    """Dispatch policy interface.
+
+    `pick(req, views)` chooses among the eligible replicas and returns
+    `(chosen replica idx, prefix-cached prompt tokens)` — the cached
+    count is nonzero only for affinity hits, and the replica resumes the
+    request with that many prompt tokens already materialized.
+
+    `observe(idx, t, ttft)` is the cluster engine's outcome feedback
+    channel: replica `idx` completed a request at time `t` (s) with the
+    given end-to-end TTFT (s). Stateless policies ignore it."""
 
     name = "base"
 
@@ -161,6 +171,11 @@ class SLODebtRouter(Router):
 
 def make_router(name: str, *, hit_frac: float = 0.5, slo_ttft: float = 2.0,
                 debt_window: float = 30.0) -> Router:
+    """Build a router by name (one of `ROUTERS`). `hit_frac` is the
+    affinity router's prefix-cache discount in [0, 1); `slo_ttft` (s) and
+    `debt_window` (s) parameterize the slo_debt router's rolling
+    violation window. The extra knobs are ignored by policies that don't
+    use them, so one call site serves every policy."""
     if name == "round_robin":
         return RoundRobinRouter()
     if name == "jsq":

@@ -90,8 +90,14 @@ def main(argv=None) -> None:
     reqs = wl.generate()
     kv_cap = args.kv_gb * 1e9 if args.kv_gb is not None else None
 
+    rate_note = ""
+    if args.arrival in ("diurnal", "envelope") and reqs:
+        # the peak offered rate is what static provisioning (and a
+        # predictive autoscaler's envelope lookahead) must be sized for
+        rate_note = f" (envelope peak {wl.peak_rate(0.0, reqs[-1].arrival):g})"
     print(f"# {cfg.name} on {hw.name} tp={args.tp}  |  "
-          f"{len(reqs)} requests, {args.arrival} arrivals @ {args.qps} qps")
+          f"{len(reqs)} requests, {args.arrival} arrivals @ {args.qps} qps"
+          f"{rate_note}")
     print(f"# weights {cost.weight_bytes / 1e9:.1f} GB/dev, "
           f"KV budget {(kv_cap or cost.kv_capacity_bytes) / 1e9:.1f} GB/dev")
 

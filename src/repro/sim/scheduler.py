@@ -229,17 +229,25 @@ class ReplicaSim:
         self._pending.append(_Run(req, rec, cached=cached, generated=generated))
         return rec
 
-    def evict_pending(self) -> list[SimRequest]:
+    def evict_pending(self, *, include_staged: bool = False) -> list[SimRequest]:
         """Remove and return queued requests that were never admitted (no
-        slot, no KV, no emitted tokens) — the graceful-drain contract: a
-        replica leaving the fleet runs out everything it has started
+        slot, no KV, no emitted tokens here) — the graceful-drain contract:
+        a replica leaving the fleet runs out everything it has started
         (including preempted-and-requeued work, which has already emitted
         tokens) but hands untouched arrivals back for re-routing. The
-        evicted requests' records are withdrawn as if never pushed here."""
+        evicted requests' records are withdrawn as if never pushed here.
+
+        `include_staged` also evicts never-admitted requests that entered
+        with pre-materialized KV state (`cached`/`generated` > 0): a
+        draining DECODE replica's queued-but-unstarted handoffs, which the
+        cluster re-routes to the surviving pool members so the drain does
+        not have to wait behind a cold queue. Admitted work is never
+        evicted in either mode."""
         keep: deque[_Run] = deque()
         out: list[SimRequest] = []
         for r in self._pending:
-            if r.rec.admitted < 0 and r.cached == 0 and r.generated == 0:
+            staged = r.cached > 0 or r.generated > 0
+            if r.rec.admitted < 0 and (include_staged or not staged):
                 out.append(r.req)
                 self.res.records.remove(r.rec)
                 self._rids.discard(r.req.rid)

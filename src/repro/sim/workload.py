@@ -20,7 +20,11 @@ Lewis-Shedler thinning of a homogeneous process at the envelope peak:
     "time"/"rate"), for replaying measured production rate curves.
 
 `rate_at(t)` exposes the envelope so autoscaling policies and plots can
-reference the offered load the generator drew from.
+reference the offered load the generator drew from; `peak_rate(t0, t1)`
+is its lookahead form — the maximum offered rate over a window, which is
+what a predictive autoscaler provisioning capacity that takes `warmup`
+seconds to come online must target (pass `Workload.peak_rate` as
+`AutoscaleConfig.envelope`).
 
 Trace JSONL rows: {"arrival": s, "prompt": n, "output": m} — the aliases
 "arrival_s", "prompt_tokens"/"input_tokens", "output_tokens" are accepted
@@ -37,6 +41,7 @@ artifacts of naive `seed + i` reseeding.
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass, field, replace
 
 import numpy as np
@@ -190,6 +195,39 @@ class Workload:
         if self.arrival == "envelope":
             ts, rs = self._envelope()
             return float(np.interp(t, ts, rs))
+        return self.qps
+
+    def peak_rate(self, t0: float, t1: float) -> float:
+        """Maximum offered arrival rate (requests/s) over [t0, t1].
+
+        The envelope-lookahead a predictive autoscaler runs on: capacity
+        ordered at `t0` that takes `t1 - t0` seconds to warm up must be
+        sized for the PEAK rate of the window, not the instantaneous rate
+        at either end (on the downslope of a diurnal crest the endpoint
+        rates understate the crest still inside the window).
+
+          * diurnal  — closed form: the sinusoid's crest if one falls
+            inside the window, else the larger endpoint (the envelope is
+            monotonic between extremes).
+          * envelope — the max over both endpoints and every breakpoint
+            strictly inside the window (the replay is piecewise-linear).
+          * constant/poisson/bursty — `qps` (flat envelope).
+        """
+        if t1 < t0:
+            raise ValueError("peak_rate needs t1 >= t0")
+        if self.arrival == "diurnal":
+            # rate crests where sin(.) == 1: t* = (0.25 - phase + k) * P
+            period = self.diurnal_period
+            t_star = (0.25 - self.diurnal_phase) * period
+            k = math.ceil((t0 - t_star) / period)
+            if t_star + k * period <= t1:
+                return self.qps * (1.0 + self.diurnal_amp)
+            return max(self.rate_at(t0), self.rate_at(t1))
+        if self.arrival == "envelope":
+            ts, rs = self._envelope()
+            inside = rs[(ts > t0) & (ts < t1)]
+            peak = max(self.rate_at(t0), self.rate_at(t1))
+            return float(max(peak, inside.max())) if inside.size else peak
         return self.qps
 
     def _thinned_arrivals(self, rng: np.random.Generator, n: int) -> np.ndarray:

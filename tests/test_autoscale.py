@@ -1,7 +1,11 @@
-"""repro.cluster.autoscale: pinned-bounds parity with the static cluster,
-request conservation (exactly-once completed-or-shed) across scale-ups,
-drains, and retries, warmup/drain semantics, shedding, the SLO-debt
-signals, and provisioning economics vs static peak."""
+"""repro.cluster.autoscale: pinned-bounds parity with the static cluster
+(reactive, predictive, and pool-aware modes), request conservation
+(exactly-once completed-or-shed) across scale-ups, drains, and retries,
+warmup/drain semantics, shedding, the reactive signals, the predictive
+M/G/1 policy's lead over the ramp, independent pool scaling, and
+provisioning economics vs static peak."""
+
+from dataclasses import replace
 
 import pytest
 
@@ -14,6 +18,7 @@ from repro.cluster import (
     ClusterSpec,
     ReplicaSpec,
     provisioning_summary,
+    seed_predictive,
     simulate_cluster,
     summarize_cluster,
 )
@@ -46,18 +51,39 @@ def _records_key(cres):
 
 
 # ------------------------------------------------------------ pinned parity
+def _pinned_autoscale(kind: str, pools: list[str], wl: Workload):
+    """A control loop whose bounds pin the fleet at the template size."""
+    n = len(pools)
+    if kind == "rate":
+        return AutoscaleConfig(min_replicas=n, max_replicas=n,
+                               interval=0.5, warmup=1.0)
+    if kind == "predictive":
+        return seed_predictive(
+            AutoscaleConfig(min_replicas=n, max_replicas=n,
+                            interval=0.5, warmup=1.0), wl)
+    # pool-aware: each pool pinned at its own template count, on the
+    # pool-native policies
+    counts = {p: pools.count(p) for p in dict.fromkeys(pools)}
+    policy = {"mixed": "queue_wait", "prefill": "queue_wait",
+              "decode": "kv_tpot"}
+    return {p: AutoscaleConfig(policy=policy[p], min_replicas=c,
+                               max_replicas=c, interval=0.5, warmup=1.0)
+            for p, c in counts.items()}
+
+
+@pytest.mark.parametrize("kind", ["rate", "predictive", "pool"])
 @pytest.mark.parametrize("pools", [["mixed"] * 3,
                                    ["prefill", "decode", "decode"]])
-def test_pinned_bounds_reproduce_static_cluster_exactly(pools):
+def test_pinned_bounds_reproduce_static_cluster_exactly(pools, kind):
     # min == max == N: the control loop ticks but never acts, and every
-    # record is bit-identical to the static N-replica cluster
-    reqs = _wl().generate()
-    n = len(pools)
+    # record is bit-identical to the static N-replica cluster — for the
+    # reactive fleet-wide loop, the predictive policy, and independent
+    # per-pool loops alike
+    wl = _wl()
+    reqs = wl.generate()
     static = simulate_cluster(reqs, CFG, _spec(pools))
-    pinned = simulate_cluster(
-        reqs, CFG, _spec(pools),
-        autoscale=AutoscaleConfig(min_replicas=n, max_replicas=n,
-                                  interval=0.5, warmup=1.0))
+    pinned = simulate_cluster(reqs, CFG, _spec(pools),
+                              autoscale=_pinned_autoscale(kind, pools, wl))
     assert _records_key(pinned) == _records_key(static)
     assert pinned.assignments == static.assignments
     assert pinned.scale_events == []
@@ -346,3 +372,270 @@ def test_disaggregated_autoscale_keeps_pool_ratio_and_conserves():
     # prefill stage + (multi-token) decode stage cover every request
     multi = [r for r in reqs if r.output > 1]
     assert cres.xfer_count == len(multi)
+
+
+# --------------------------------------------------------- predictive policy
+def test_predicted_wait_pollaczek_khinchine():
+    asc = AutoscaleConfig(policy="predictive", min_replicas=1, max_replicas=8,
+                          service_time=0.2, service_cv2=1.0)
+    sc = Autoscaler(asc)
+    # rho = 2 qps * 0.2 s = 0.4 on one replica: Wq = .4 * 1 * .2 / .6
+    assert sc.predicted_wait(2.0, 1) == pytest.approx(0.4 * 0.2 / 0.6)
+    # n scales the per-replica rate down
+    assert sc.predicted_wait(4.0, 2) == pytest.approx(sc.predicted_wait(2.0, 1))
+    # saturation -> infinite wait
+    assert sc.predicted_wait(5.0, 1) == float("inf")
+    # deterministic service (cv2=0) halves the M/M/1 wait
+    det = Autoscaler(replace(asc, service_cv2=0.0))
+    assert det.predicted_wait(2.0, 1) == pytest.approx(0.2 * 0.4 / 0.6 / 2)
+
+
+def test_predictive_desired_sizes_for_envelope_peak():
+    wl = Workload(qps=10.0, arrival="diurnal", diurnal_period=100.0,
+                  diurnal_amp=0.8)
+    asc = AutoscaleConfig(policy="predictive", min_replicas=1, max_replicas=10,
+                          interval=1.0, service_time=0.2, target_wait=0.2,
+                          envelope=wl.peak_rate, lookahead=20.0)
+    far = Autoscaler(asc).desired(5.0, 1)  # horizon covers the t=25 crest
+    near = Autoscaler(replace(asc, lookahead=1e-6)).desired(5.0, 1)
+    assert far > near  # the lookahead provisions for the crest ahead
+    # smallest n meeting the wait budget at the horizon peak (18 qps)
+    sc = Autoscaler(asc)
+    want = sc.desired(5.0, 1)
+    assert want < 10  # the budget is reachable inside the bounds
+    assert sc.predicted_wait(18.0, want) <= 0.2
+    assert sc.predicted_wait(18.0, want - 1) > 0.2
+    # an empty envelope window (overnight) falls to min_replicas
+    assert Autoscaler(asc).desired(70.0, 5) >= 1
+
+
+def test_predictive_needs_service_time():
+    asc = AutoscaleConfig(policy="predictive")
+    with pytest.raises(ValueError, match="service_time"):
+        Autoscaler(asc)
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+    sc = Autoscaler(asc, cost=cost, sched=SchedConfig(slots=8))
+    assert sc.service_time > 0  # priced from the cost model
+
+
+def test_effective_service_time_pool_variants():
+    cost = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+    asc = AutoscaleConfig(mean_prompt=256, mean_output=64)
+    sched = SchedConfig(slots=8)
+    pre = asc.effective_service_time(cost, sched, "prefill")
+    dec = asc.effective_service_time(cost, sched, "decode")
+    mix = asc.effective_service_time(cost, sched, "mixed")
+    # prefill pays the whole prompt serially; the batched pools amortize
+    assert pre == pytest.approx(cost.prefill_time(256))
+    assert mix > dec  # mixed adds the prefill share on top of decode
+    assert mix == pytest.approx(pre / 8 + dec, rel=1e-6)
+    # explicit override wins
+    assert replace(asc, service_time=0.5).effective_service_time(
+        cost, sched, "mixed") == 0.5
+
+
+def test_seed_predictive_from_workload_and_requests():
+    wl = _wl()
+    reqs = wl.generate()
+    asc = seed_predictive(AutoscaleConfig(), wl, reqs)
+    assert asc.policy == "predictive"
+    assert asc.envelope.__self__ is wl  # bound to the workload's peak_rate
+    assert asc.envelope(0.0, 10.0) == wl.peak_rate(0.0, 10.0)
+    assert asc.mean_prompt == pytest.approx(
+        sum(r.prompt for r in reqs) / len(reqs))
+    # without requests the spec's distribution means are used
+    asc2 = seed_predictive(AutoscaleConfig(), wl)
+    assert asc2.mean_prompt == wl.prompt.mean
+
+
+def test_predictive_leads_ramp_by_warmup():
+    # the acceptance assertion: under a slow 2 s warmup, predictive
+    # scale-ups fire at least a warmup BEFORE the envelope crest, so the
+    # capacity is accepting by the time the peak arrives
+    warmup = 2.0
+    wl = _wl(qps=20.0, num_requests=300, diurnal_period=40.0,
+             prompt=LengthDist("lognormal", 256, 0.4, lo=16, hi=2048),
+             output=LengthDist("lognormal", 64, 0.4, lo=4, hi=512))
+    reqs = wl.generate()
+    t_peak = wl.diurnal_period / 4  # sin crest of the first day
+    asc = seed_predictive(
+        AutoscaleConfig(min_replicas=2, max_replicas=5, interval=0.5,
+                        window=5.0, warmup=warmup), wl, reqs)
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"] * 2), autoscale=asc)
+    adds = [ev for ev in cres.scale_events
+            if ev["action"] == "add" and ev["t"] <= t_peak]
+    assert adds, "the ramp must trigger predictive scale-up"
+    assert min(ev["t"] for ev in adds) <= t_peak - warmup
+    for ev in adds:  # ordered early enough to be READY by the crest
+        assert ev["ready"] <= t_peak
+    assert sorted(r.rid for r in cres.records) == list(range(300))
+
+
+# -------------------------------------------------------- pool-aware scaling
+def test_queue_wait_policy_hysteresis():
+    asc = AutoscaleConfig(policy="queue_wait", min_replicas=1, max_replicas=8,
+                          window=10.0, wait_hi=0.5, wait_lo=0.1)
+    sc = Autoscaler(asc)
+    for i in range(10):
+        sc.observe_wait(5.0, 1.0)  # mean wait 1.0 > hi
+    assert sc.queue_wait(5.0) == pytest.approx(1.0)
+    assert sc.desired(5.0, 3) == 4
+    sc2 = Autoscaler(asc)
+    for i in range(10):
+        sc2.observe_wait(5.0, 0.01)  # below lo -> shrink
+    assert sc2.desired(5.0, 3) == 2
+    sc3 = Autoscaler(asc)
+    for i in range(10):
+        sc3.observe_wait(5.0, 0.3)  # inside the band -> hold
+    assert sc3.desired(5.0, 3) == 3
+    assert Autoscaler(asc).desired(5.0, 1) == 1  # empty window: hold at min
+
+
+def test_kv_tpot_policy_signals():
+    asc = AutoscaleConfig(policy="kv_tpot", min_replicas=1, max_replicas=8,
+                          window=10.0, slo_tpot=0.05, debt_hi=0.2,
+                          debt_lo=0.02, kv_hi=0.85, kv_lo=0.40)
+    sc = Autoscaler(asc)
+    assert sc.desired(5.0, 3, kv_frac=0.9) == 4  # KV pressure alone
+    for i in range(10):
+        sc.observe_tpot(5.0, 0.2 if i < 3 else 0.01)  # 30% violations
+    assert sc.tpot_debt(5.0) == pytest.approx(0.3)
+    assert sc.desired(5.0, 3, kv_frac=0.5) == 4  # TPOT debt alone
+    sc2 = Autoscaler(asc)
+    for _ in range(10):
+        sc2.observe_tpot(5.0, 0.01)
+    assert sc2.desired(5.0, 3, kv_frac=0.2) == 2  # both low -> shrink
+    assert sc2.desired(5.0, 3, kv_frac=0.6) == 3  # KV in band -> hold
+
+
+def test_pool_aware_scales_bottleneck_pool_only():
+    # prefill-heavy stream: the prefill pool grows, the decode pool holds
+    # its floor — the template ratio would have grown both
+    wl = _wl(qps=6.0, num_requests=80, diurnal_period=40.0, diurnal_amp=0.8,
+             prompt=LengthDist("lognormal", 2048, 0.3, lo=256, hi=6144),
+             output=LengthDist("lognormal", 16, 0.4, lo=2, hi=64))
+    reqs = wl.generate()
+    base = AutoscaleConfig(min_replicas=1, max_replicas=4, interval=0.5,
+                           window=3.0, warmup=0.5)
+    pa = {"prefill": seed_predictive(base, wl, reqs),
+          "decode": replace(base, policy="kv_tpot")}
+    cres = simulate_cluster(reqs, CFG, _spec(["prefill", "decode"]),
+                            autoscale=pa)
+    adds = [ev for ev in cres.scale_events if ev["action"] == "add"]
+    assert adds and all(ev["pool"] == "prefill" for ev in adds)
+    assert sorted(r.rid for r in cres.records) == list(range(80))
+    prov = provisioning_summary(cres)
+    assert set(prov["pools"]) == {"prefill", "decode"}
+    assert prov["pools"]["prefill"]["peak_replicas"] > \
+        prov["pools"]["decode"]["peak_replicas"]
+    # per-pool billing partitions the fleet bill exactly
+    assert sum(p["replica_hours"] for p in prov["pools"].values()) == \
+        pytest.approx(prov["replica_hours"])
+
+
+def test_decode_pool_drain_rehands_pending_handoffs():
+    # the mid-handoff shrink: a decode replica drains while staged
+    # handoffs sit in its queue; they re-route to the survivors (paying a
+    # second p2p hop) and every request still completes exactly once
+    reqs = [SimRequest(i, 0.001 * i, 64, 8) for i in range(24)]
+    spec = _spec(["prefill", "decode", "decode"],
+                 sched=SchedConfig(slots=2))
+    pa = {"decode": AutoscaleConfig(
+        policy="kv_tpot", min_replicas=1, max_replicas=2, interval=0.15,
+        window=5.0, warmup=0.1, slo_tpot=1e9, kv_hi=1.0, kv_lo=1.0,
+        debt_hi=1.0, debt_lo=1.0)}  # always asks to shrink
+    cres = simulate_cluster(reqs, CFG, spec, autoscale=pa)
+    drains = [ev for ev in cres.scale_events if ev["action"] == "drain"]
+    assert drains and all(ev["pool"] == "decode" for ev in drains)
+    assert sorted(r.rid for r in cres.records) == list(range(24))
+    for r in cres.records:
+        assert r.finish >= r.first_token >= r.arrival
+    # re-routed handoffs paid extra transfer hops
+    assert cres.xfer_count > 24
+    # the prefill pool was never touched (no scaler attached)
+    assert all(ev["pool"] != "prefill" for ev in cres.scale_events)
+
+
+def test_pool_autoscale_validation():
+    reqs = _wl(num_requests=4).generate()
+    with pytest.raises(ValueError, match="names pool"):
+        simulate_cluster(reqs, CFG, _spec(["mixed"]),
+                         autoscale={"prefill": AutoscaleConfig()})
+    with pytest.raises(ValueError, match="AutoscaleConfig"):
+        simulate_cluster(reqs, CFG, _spec(["mixed"]),
+                         autoscale={"mixed": "rate"})
+
+
+def test_autoscale_config_new_field_validation():
+    for bad in (dict(lookahead=0.0), dict(target_wait=-1.0),
+                dict(service_time=0.0), dict(service_cv2=-0.1),
+                dict(mean_prompt=0), dict(wait_lo=0.5, wait_hi=0.1),
+                dict(slo_tpot=0.0), dict(kv_lo=0.9, kv_hi=0.5),
+                dict(kv_hi=1.5)):
+        with pytest.raises(ValueError):
+            AutoscaleConfig(**bad).validate()
+
+
+# ------------------------------------------------------- shed-aware economics
+def test_provisioning_summary_prices_shedding():
+    reqs = [SimRequest(i, 0.0, 96, 16) for i in range(30)]
+    spec = _spec(["mixed"], shed_depth=5, retry_after=0.1, max_retries=0)
+    cres = simulate_cluster(reqs, CFG, spec)
+    prov = provisioning_summary(cres, shed_cost_usd=0.01)
+    assert prov["shed"] == 25
+    assert prov["shed_cost_usd"] == pytest.approx(0.25)
+    assert prov["cost_usd_total"] == pytest.approx(
+        prov["cost_usd"] + 0.25)
+    # free drops keep the old totals
+    free = provisioning_summary(cres)
+    assert free["shed_cost_usd"] == 0.0
+    assert free["cost_usd_total"] == pytest.approx(free["cost_usd"])
+
+
+# ---------------------------------------------------------- golden regression
+def _sig6(x: float) -> float:
+    return float(f"{x:.6g}")
+
+
+def test_golden_autoscale_modes_pinned():
+    # fixed-seed predictive and pool-aware runs with summary metrics
+    # pinned to 6 significant figures: catches silent policy/engine drift
+    # behavioral tests cannot see. If a deliberate change moves these,
+    # re-pin them in the same PR and say why in the commit message.
+    wl = _wl(qps=60.0, num_requests=240,
+             prompt=LengthDist("lognormal", 192, 0.4, lo=16, hi=1024))
+    reqs = wl.generate()
+    keys = ("ttft_p50", "ttft_p95", "tpot_p50", "tpot_p95", "e2e_mean",
+            "tokens_per_s", "goodput_frac", "makespan_s")
+
+    asc = seed_predictive(
+        AutoscaleConfig(min_replicas=1, max_replicas=4, interval=0.5,
+                        window=2.0, warmup=0.5), wl, reqs)
+    cres = simulate_cluster(reqs, CFG, _spec(["mixed"]), autoscale=asc)
+    s = summarize_cluster(cres, slo_ttft=2.0, slo_tpot=0.05)
+    got = {k: _sig6(s[k]) for k in keys}
+    assert got == dict(
+        ttft_p50=0.452514, ttft_p95=1.30541,
+        tpot_p50=0.0175626, tpot_p95=0.0204003,
+        e2e_mean=0.871226, tokens_per_s=1292.04,
+        goodput_frac=1.0, makespan_s=4.32882), "predictive golden drift"
+    assert s["scale_events"] == 3 and s["peak_replicas"] == 4
+    assert _sig6(provisioning_summary(cres)["replica_hours"]) == 0.00439977
+
+    base = AutoscaleConfig(min_replicas=1, max_replicas=3, interval=0.5,
+                           window=2.0, warmup=0.5)
+    pa = {"prefill": replace(base, policy="queue_wait",
+                             wait_hi=0.1, wait_lo=0.02),
+          "decode": replace(base, policy="kv_tpot",
+                            kv_hi=0.02, kv_lo=0.001)}
+    cres = simulate_cluster(reqs, CFG, _spec(["prefill", "decode"]),
+                            autoscale=pa)
+    s = summarize_cluster(cres, slo_ttft=2.0, slo_tpot=0.05)
+    got = {k: _sig6(s[k]) for k in keys}
+    assert got == dict(
+        ttft_p50=0.457187, ttft_p95=1.4918,
+        tpot_p50=0.0418892, tpot_p95=0.131398,
+        e2e_mean=1.65825, tokens_per_s=875.385,
+        goodput_frac=0.545833, makespan_s=6.38919), "pool-aware golden drift"
+    assert s["scale_events"] == 4 and s["peak_replicas"] == 6
+    assert _sig6(provisioning_summary(cres)["replica_hours"]) == 0.00788081

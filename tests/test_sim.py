@@ -506,3 +506,52 @@ def test_summarize_goodput_and_throughput():
         sum(r.output for r in reqs) / res.makespan)
     tight = summarize(res, slo_ttft=1e-9)
     assert tight["goodput_frac"] == 0.0
+
+
+# ----------------------------------------------------- envelope lookahead
+def test_peak_rate_diurnal_matches_dense_sampling():
+    wl = Workload(qps=10.0, arrival="diurnal", diurnal_period=100.0,
+                  diurnal_amp=0.5)
+    for t0, t1 in [(0, 10), (10, 40), (30, 80), (95, 130), (60, 70)]:
+        ref = max(wl.rate_at(t) for t in np.linspace(t0, t1, 4001))
+        assert wl.peak_rate(t0, t1) == pytest.approx(ref, rel=1e-4)
+    # the crest (t = period/4 = 25) inside the window -> exact peak
+    assert wl.peak_rate(20.0, 30.0) == pytest.approx(15.0)
+    # degenerate window -> pointwise rate
+    assert wl.peak_rate(7.0, 7.0) == pytest.approx(wl.rate_at(7.0))
+    with pytest.raises(ValueError):
+        wl.peak_rate(5.0, 1.0)
+
+
+def test_peak_rate_envelope_and_flat(tmp_path):
+    import json
+
+    path = tmp_path / "rates.jsonl"
+    rows = [{"t": 0, "qps": 4}, {"t": 10, "qps": 20}, {"t": 20, "qps": 6}]
+    path.write_text("\n".join(json.dumps(r) for r in rows) + "\n")
+    wl = Workload(arrival="envelope", rate_path=str(path))
+    assert wl.peak_rate(0.0, 20.0) == pytest.approx(20.0)  # breakpoint inside
+    assert wl.peak_rate(12.0, 20.0) == pytest.approx(wl.rate_at(12.0))
+    assert wl.peak_rate(0.0, 5.0) == pytest.approx(wl.rate_at(5.0))
+    # past the last breakpoint the envelope holds its tail value
+    assert wl.peak_rate(25.0, 90.0) == pytest.approx(6.0)
+    # flat arrival processes report the constant rate
+    assert Workload(qps=7.0, arrival="poisson").peak_rate(0.0, 100.0) == 7.0
+
+
+def test_evict_pending_include_staged_rehands_handoffs():
+    # the decode-drain contract: never-admitted handoff-staged requests
+    # (cached/generated KV) stay put by default but come out with
+    # include_staged=True; admitted work stays in either mode
+    cost = _cost()
+    sim = ReplicaSim(cost, SchedConfig(policy="continuous", slots=1))
+    sim.push(SimRequest(0, 0.0, 64, 8), cached=64, generated=1)
+    sim.push(SimRequest(1, 0.0, 64, 4), cached=64, generated=1)
+    sim.push(SimRequest(2, 0.0, 64, 4))
+    sim.step()  # admits rid 0; 1 (staged) and 2 (fresh) stay pending
+    assert [r.rid for r in sim.evict_pending()] == [2]  # staged kept
+    evicted = sim.evict_pending(include_staged=True)
+    assert [r.rid for r in evicted] == [1]
+    assert {r.rid for r in sim.res.records} == {0}
+    done = sim.run()
+    assert [r.rid for r in done] == [0]
