@@ -1,15 +1,19 @@
 """Cluster-simulation suite: colocated vs disaggregated at matched QPS,
-router policy comparison, a heterogeneous A100+H100 fleet, and the
-single-replica parity contract with `repro.sim.simulate`. Rows follow the
-harness convention (name, us_per_call, derived)."""
+router policy comparison, a heterogeneous A100+H100 fleet, the modeled
+prefix cache (finite vs infinite budget) under shared-prefix traffic, and
+the single-replica parity contract with `repro.sim.simulate`. Rows follow
+the harness convention (name, us_per_call, derived)."""
 
 from __future__ import annotations
+
+import math
 
 from repro.configs import get_config
 from repro.core.hardware import H100_SXM
 from repro.sim import LengthDist, SchedConfig, ServingCostModel, Workload, simulate
 from repro.cluster import (
     ClusterSpec,
+    PrefixCacheConfig,
     ReplicaSpec,
     simulate_cluster,
     summarize_cluster,
@@ -72,6 +76,32 @@ def bench_cluster():
         s["e2e_p50"] * 1e6,
         f"tok/s={s['tokens_per_s']:.0f};goodput={s['goodput_frac']:.2f}",
     ))
+
+    # modeled prefix cache under shared-prefix session traffic: infinite
+    # budget (== the legacy unconditional discount, pinned-parity anchor)
+    # vs a finite LRU+TTL budget that actually evicts
+    pwl = Workload(
+        name="cluster-prefix", qps=24.0, num_requests=48, arrival="poisson",
+        prompt=LengthDist("lognormal", 256, 0.4, lo=16, hi=2048),
+        output=LengthDist("lognormal", 64, 0.4, lo=4, hi=512), seed=0,
+        num_sessions=6, num_prefix_groups=3, prefix=LengthDist("fixed", 96.0))
+    preqs = pwl.generate()
+    for label, pc in (
+            ("infinite", PrefixCacheConfig(budget_bytes=math.inf)),
+            ("finite", PrefixCacheConfig(budget_frac=0.0005, ttl=5.0))):
+        spec = ClusterSpec(replicas=_spec(["mixed"] * 4).replicas,
+                           router="affinity", prefix_cache=pc)
+        s = summarize_cluster(simulate_cluster(preqs, cfg, spec,
+                                               _cost_cache=cache), **SLO)
+        rows.append((
+            f"cluster/prefix-cache-{label}",
+            s["ttft_p95"] * 1e6,
+            f"ttft_p95={s['ttft_p95'] * 1e3:.0f}ms"
+            f";hit_tokens={s['cache_hit_tokens']}"
+            f";hit_rate={s['cache_hit_rate']:.2f}"
+            f";evictions={s['cache_evictions']}"
+            f";goodput={s['goodput_frac']:.2f}",
+        ))
 
     # single-replica cluster must equal repro.sim.simulate exactly
     cost = ServingCostModel(cfg, H100_SXM, ctx_quantum=32)

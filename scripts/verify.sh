@@ -29,6 +29,16 @@ python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 12 \
     --requests 24 --slots 4 --ctx-quantum 32 --mode disaggregated \
     --arrival diurnal --diurnal-period 20 --pool-autoscale \
     --max-replicas 3 --scale-interval 1
+# modeled prefix cache: finite LRU+TTL budget over shared-prefix traffic,
+# and the planner's cache-budget-share sweep
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 24 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode colocated \
+    --router affinity --sessions 4 --prefix-groups 2 --prefix-len 64 \
+    --prefix-cache --cache-frac 0.001 --cache-ttl 5
+python -m repro.cluster --config qwen3_14b --hw h100 --qps 16 --requests 16 \
+    --slots 4 --ctx-quantum 32 --plan --plan-max-replicas 2 \
+    --router affinity --sessions 4 --plan-cache-fracs 0.05,0.2
+python examples/prefix_cache.py
 
 # docs: the generated CLI reference must match the parsers; links resolve
 python scripts/gen_cli_docs.py --check

@@ -12,6 +12,13 @@ actually planned against:
     disaggregated (`prefill` pools handing KV to `decode` pools over a
     `comm.p2p`-priced transfer sized by §3.5's cache formula), with
     heterogeneous per-replica hardware and scheduler configs.
+  * `prefixcache` — the modeled prefix cache behind affinity routing:
+    per-replica finite byte budgets carved out of KV capacity, LRU + TTL
+    eviction, token-granular prefix groups shared across sessions, and
+    drain/retire invalidation. `ClusterSpec.prefix_cache` switches the
+    affinity discount from unconditional `hit_frac` to actual residency
+    (`PrefixCacheConfig(budget_bytes=math.inf)` reproduces the legacy
+    behavior bit-for-bit).
   * `planner` — SLO-driven capacity planning: sweep replica count / pool
     split at a target QPS, price candidates in $/hr, return the cheapest
     plan whose SLO attainment clears the bar; `provisioning_summary`
@@ -49,6 +56,11 @@ from repro.cluster.cluster import (
     simulate_cluster,
     summarize_cluster,
 )
+from repro.cluster.prefixcache import (
+    FleetPrefixCache,
+    PrefixCacheConfig,
+    ReplicaPrefixCache,
+)
 from repro.cluster.planner import (
     DEFAULT_PRICE_PER_DEV_HR,
     cluster_price_per_hr,
@@ -66,8 +78,11 @@ __all__ = [
     "ClusterResult",
     "ClusterSpec",
     "DEFAULT_PRICE_PER_DEV_HR",
+    "FleetPrefixCache",
     "POOLS",
+    "PrefixCacheConfig",
     "ROUTERS",
+    "ReplicaPrefixCache",
     "ReplicaSpec",
     "ReplicaView",
     "Router",

@@ -17,6 +17,14 @@ envelope through an M/G/1 wait estimate (scale-ups lead the ramp by the
 warmup); `--pool-autoscale` scales a disaggregated fleet's prefill and
 decode pools independently on their own signals (admission wait vs
 KV + TPOT pressure) instead of the template ratio.
+
+`--prefix-cache` replaces the affinity router's unconditional `hit_frac`
+discount with a modeled per-replica prefix cache: a finite byte budget
+(`--cache-frac` of KV capacity, carved out of it, or `--cache-gb`
+absolute), LRU + TTL eviction (`--cache-ttl`), and cross-session sharing
+of the workload's prefix groups (`--prefix-groups`/`--prefix-len`
+generate multi-tenant system prompts). `--plan-cache-fracs` sweeps the
+budget share as a capacity dimension of `--plan`.
 """
 
 from __future__ import annotations
@@ -31,6 +39,7 @@ from repro.cluster import (
     ROUTERS,
     AutoscaleConfig,
     ClusterSpec,
+    PrefixCacheConfig,
     ReplicaSpec,
     cluster_price_per_hr,
     plan_capacity,
@@ -85,14 +94,35 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--output-sigma", type=float, default=0.4)
     p.add_argument("--sessions", type=int, default=0,
                    help="session count for affinity routing (0 = none)")
+    p.add_argument("--prefix-groups", type=int, default=0,
+                   help="shared-prefix groups (multi-tenant system prompts) "
+                        "in the workload (0 = none)")
+    p.add_argument("--prefix-len", type=float, default=256,
+                   help="tokens per shared group prefix (--prefix-groups)")
     p.add_argument("--trace", default=None, help="JSONL trace to replay instead")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--slo-ttft", type=float, default=2.0, help="seconds")
     p.add_argument("--slo-tpot", type=float, default=0.05, help="seconds/token")
     p.add_argument("--ctx-quantum", type=int, default=16)
+    # modeled prefix cache (default: legacy unconditional affinity discount)
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="model the prefix cache: finite per-replica budget, "
+                        "LRU+TTL eviction, cross-session prefix sharing")
+    p.add_argument("--cache-frac", type=float, default=0.1,
+                   help="prefix-cache budget as a fraction of replica KV "
+                        "capacity (carved out of it)")
+    p.add_argument("--cache-gb", type=float, default=None,
+                   help="absolute prefix-cache budget in GB (overrides "
+                        "--cache-frac; 'inf' = legacy free-infinite cache)")
+    p.add_argument("--cache-ttl", type=float, default=None,
+                   help="prefix-cache entry TTL in idle seconds (default: "
+                        "no expiry)")
     p.add_argument("--plan", action="store_true",
                    help="run the SLO-driven capacity sweep instead")
     p.add_argument("--plan-max-replicas", type=int, default=6)
+    p.add_argument("--plan-cache-fracs", default=None,
+                   help="comma-separated cache budget shares to sweep as a "
+                        "capacity dimension of --plan (e.g. 0.05,0.1,0.2)")
     p.add_argument("--attainment", type=float, default=0.95)
     # dynamic fleet
     p.add_argument("--autoscale", action="store_true",
@@ -163,8 +193,16 @@ def main(argv=None) -> None:
         output=LengthDist(args.output_dist, args.output_mean, args.output_sigma),
         seed=args.seed, trace_path=args.trace, num_sessions=args.sessions,
         diurnal_period=args.diurnal_period, diurnal_amp=args.diurnal_amp,
-        rate_path=args.rate_path)
+        rate_path=args.rate_path, num_prefix_groups=args.prefix_groups,
+        prefix=LengthDist("fixed", args.prefix_len))
     reqs = wl.generate()
+    pcache = None
+    if args.prefix_cache:
+        pcache = PrefixCacheConfig(
+            budget_frac=args.cache_frac,
+            budget_bytes=args.cache_gb * 1e9 if args.cache_gb is not None
+            else None,
+            ttl=args.cache_ttl)
     autoscale = None
     if args.autoscale or args.pool_autoscale:
         base = AutoscaleConfig(
@@ -204,29 +242,37 @@ def main(argv=None) -> None:
         sched = SchedConfig(policy=args.policy, slots=args.slots,
                             token_budget=args.token_budget,
                             admission=args.admission, slo_ttft=args.slo_ttft)
+        cache_fracs = None
+        if args.plan_cache_fracs:
+            cache_fracs = tuple(float(x) for x in
+                                args.plan_cache_fracs.split(",") if x.strip())
         plan = plan_capacity(
             cfg, wl, qps=args.qps, slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
             attainment=args.attainment, hw=hws[0], tp=args.tp,
             prec=args.prec, sched=sched, router=args.router,
             decode_router=args.decode_router, hit_frac=args.hit_frac,
             kv_block_tokens=args.block_tokens, ctx_quantum=args.ctx_quantum,
-            max_replicas=args.plan_max_replicas)
+            max_replicas=args.plan_max_replicas,
+            prefix_cache=None if cache_fracs else pcache,
+            cache_fracs=cache_fracs, cache_ttl=args.cache_ttl)
         print(f"# capacity plan: {cfg.name} @ {args.qps:g} qps, "
               f"SLO ttft<={args.slo_ttft:g}s tpot<={args.slo_tpot:g}s, "
               f"attainment>={args.attainment:.0%}")
-        hdr = (f"{'mode':<14} {'repl':>4} {'P/D':>5} {'$/hr':>7} {'attain':>7} "
-               f"{'ttft_p95':>9} {'tpot_p95':>9} {'feasible':>9}")
+        hdr = (f"{'mode':<14} {'repl':>4} {'P/D':>5} {'cache':>6} {'$/hr':>7} "
+               f"{'attain':>7} {'ttft_p95':>9} {'tpot_p95':>9} {'feasible':>9}")
         print(hdr)
         print("-" * len(hdr))
         for r in plan["rows"]:
             pd = (f"{r['prefill']}/{r['decode']}"
                   if r["mode"] == "disaggregated" else "-")
+            cf = ("-" if r.get("cache_frac") is None
+                  else f"{r['cache_frac']:.2f}")
             if "error" in r:
-                print(f"{r['mode']:<14} {r['replicas']:>4} {pd:>5} "
+                print(f"{r['mode']:<14} {r['replicas']:>4} {pd:>5} {cf:>6} "
                       f"{r['cost_per_hr']:>7.2f} {'-':>7} {'-':>9} {'-':>9} "
                       f"{'no (kv)':>9}")
                 continue
-            print(f"{r['mode']:<14} {r['replicas']:>4} {pd:>5} "
+            print(f"{r['mode']:<14} {r['replicas']:>4} {pd:>5} {cf:>6} "
                   f"{r['cost_per_hr']:>7.2f} {r['goodput_frac']:>7.0%} "
                   f"{r['ttft_p95']:>8.2f}s {r['tpot_p95'] * 1e3:>7.1f}ms "
                   f"{'YES' if r['feasible'] else 'no':>9}")
@@ -237,9 +283,11 @@ def main(argv=None) -> None:
         else:
             pd = (f" ({best['prefill']}P/{best['decode']}D)"
                   if best["mode"] == "disaggregated" else "")
+            cache = (f", cache={best['cache_frac']:.0%} of KV"
+                     if best.get("cache_frac") is not None else "")
             print(f"# cheapest feasible: {best['mode']}{pd} x{best['replicas']} "
                   f"at ${best['cost_per_hr']:.2f}/hr "
-                  f"({best['goodput_frac']:.0%} attainment)")
+                  f"({best['goodput_frac']:.0%} attainment{cache})")
         return
 
     modes = (["colocated", "disaggregated"] if args.mode == "both"
@@ -270,7 +318,8 @@ def main(argv=None) -> None:
                            router_slo_ttft=args.slo_ttft,
                            shed_depth=args.shed_depth,
                            retry_after=args.retry_after,
-                           max_retries=args.max_retries)
+                           max_retries=args.max_retries,
+                           prefix_cache=pcache)
         try:
             cres = simulate_cluster(reqs, cfg, spec, autoscale=autoscale)
         except ValueError as e:
@@ -298,10 +347,16 @@ def main(argv=None) -> None:
                  f"{s['xfer_share']:.2%} of e2e"
                  if cres.mode == "disaggregated" else "")
               + (f", prefix_hits={s['prefix_hits']}"
-                 if args.router == "affinity" else "")
+                 if args.router == "affinity" or args.prefix_cache else "")
               + (f", shed={s['shed']} ({s['shed_frac']:.1%}), "
                  f"retries={s['retries']}"
                  if args.shed_depth is not None else ""))
+        if args.prefix_cache:
+            print(f"  prefix cache: {s['cache_hit_rate']:.0%} hit rate, "
+                  f"{s['cache_hit_tokens']} prompt tokens skipped, "
+                  f"{s['cache_evictions']} evictions, "
+                  f"peak resident {s['cache_resident_gb']:.2f} GB/replica, "
+                  f"{s['cache_invalidations']} invalidations")
         if dynamic:
             label = (f"pool-aware {args.prefill_policy}/{args.decode_policy}"
                      if args.pool_autoscale else args.autoscale_policy)

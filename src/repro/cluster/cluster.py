@@ -42,6 +42,16 @@ mid-stream pool-size changes: transfers are routed among the decode
 replicas accepting at the instant the KV arrives, and a draining decode
 replica's queued-but-unstarted handoffs are re-routed to the survivors.
 
+With `ClusterSpec.prefix_cache` set, prompt-prefix reuse is MODELED
+rather than assumed: each prefilling replica runs a finite-byte LRU/TTL
+prefix cache (`repro.cluster.prefixcache`) carved out of its KV
+capacity, requests' shared prefixes (explicit `prefix_group`s shared
+across sessions, or per-session conversation history) become resident at
+dispatch and expire/evict under pressure, and every prefill discount is
+computed from the tokens ACTUALLY resident at the dispatch instant.
+Draining or retiring a replica invalidates its cache, so autoscale churn
+pays a measurable re-warm cost.
+
 Optionally the cluster sheds load instead of queueing without bound:
 when every eligible replica's depth is at `shed_depth`, the arrival is
 retried `retry_after` seconds later (up to `max_retries` times) and then
@@ -69,6 +79,11 @@ from repro.sim.scheduler import ReplicaSim, ReqRecord, SchedConfig, SimResult
 from repro.sim.workload import SimRequest
 
 from repro.cluster.autoscale import AutoscaleConfig, Autoscaler
+from repro.cluster.prefixcache import (
+    FleetPrefixCache,
+    PrefixCacheConfig,
+    prefix_key,
+)
 from repro.cluster.router import AffinityRouter, ReplicaView, make_router
 
 POOLS = ("mixed", "prefill", "decode")
@@ -117,6 +132,9 @@ class ClusterSpec:
     shed_depth: int | None = None  # shed when EVERY eligible depth >= this
     retry_after: float = 0.5  # seconds before a shed arrival is retried
     max_retries: int = 2  # retries before the request is dropped
+    # modeled prefix cache (None = the legacy unconditional hit_frac
+    # discount for the affinity router, no discount for other routers)
+    prefix_cache: PrefixCacheConfig | None = None
 
     @property
     def disaggregated(self) -> bool:
@@ -165,6 +183,13 @@ class ClusterSpec:
                 "affinity prefix-cache discounts cannot apply to static-policy "
                 f"replicas (replicas {static}); use continuous/chunked or "
                 "hit_frac=0")
+        if self.prefix_cache is not None:
+            self.prefix_cache.validate()
+            if static:
+                raise ValueError(
+                    "prefix-cache hits enter replicas mid-stream, which "
+                    f"static-policy replicas (replicas {static}) cannot "
+                    "accept; use continuous or chunked")
 
 
 @dataclass
@@ -184,6 +209,8 @@ class ClusterResult:
     scale_events: list[dict] = field(default_factory=list)
     shed: list[SimRequest] = field(default_factory=list)
     retries: int = 0
+    # modeled-prefix-cache counters (None when the cache is not modeled)
+    cache_stats: dict | None = None
 
     @property
     def makespan(self) -> float:
@@ -280,6 +307,15 @@ class _ClusterEngine:
         self.arrival_pool = "prefill" if self.disagg else "mixed"
         self.router = spec.make_router(spec.router)
         self.d_router = spec.make_router(spec.decode_router)
+        # the modeled prefix cache lives on the replicas that prefill;
+        # with it bound, the affinity router places by residency and the
+        # engine computes every discount from actually resident tokens
+        self.pcache: FleetPrefixCache | None = None
+        self._counted: dict[int, tuple[int, int]] = {}  # rid -> (replica, hit)
+        if spec.prefix_cache is not None:
+            self.pcache = FleetPrefixCache(spec.prefix_cache, spec.hit_frac)
+            if isinstance(self.router, AffinityRouter):
+                self.router.bind_cache(self.pcache)
 
         self.reps: list[_Rep] = []
         for rs in spec.replicas:
@@ -349,7 +385,25 @@ class _ClusterEngine:
     def _add_rep(self, rs: ReplicaSpec, pool: str, *, started: float,
                  ready: float) -> _Rep:
         cost = self._cost_for(rs)
-        rep = _Rep(sim=ReplicaSim(cost, rs.sched,
+        sched = rs.sched
+        if self.pcache is not None and pool != "decode":
+            # carve the cache budget out of the replica's KV capacity:
+            # cache warmth and live sequences compete for the same DRAM.
+            # The infinite budget (the legacy free-cache assumption) does
+            # not carve — that is the bit-for-bit parity anchor.
+            full = (sched.kv_capacity if sched.kv_capacity is not None
+                    else cost.kv_capacity_bytes)
+            budget = self.pcache.pc.budget_for(full)
+            if budget > 0 and not self.pcache.pc.infinite:
+                seq_cap = full - budget
+                if seq_cap <= 0:
+                    raise ValueError(
+                        f"prefix-cache budget ({budget / 1e9:.2f} GB) leaves "
+                        f"no KV capacity for live sequences "
+                        f"(replica budget {full / 1e9:.2f} GB)")
+                sched = replace(sched, kv_capacity=seq_cap)
+            self.pcache.register(len(self.reps), budget, cost)
+        rep = _Rep(sim=ReplicaSim(cost, sched,
                                   name=f"r{len(self.reps)}:{pool}"),
                    spec=rs, cost=cost, pool=pool, started=started, ready=ready)
         self.reps.append(rep)
@@ -365,6 +419,17 @@ class _ClusterEngine:
             {"t": t, "action": "add", "replica": self.reps.index(rep),
              "pool": pool, "ready": rep.ready})
 
+    def _on_retired(self, i: int) -> None:
+        """Replica `i` has left the fleet for good: routers prune their
+        per-replica state (session pins, debt windows) and the cache model
+        drops anything still marked resident there. Indices are never
+        reused, so pruning is behavior-neutral — it bounds state growth
+        across joins/leaves on long traces."""
+        self.router.on_retire(i)
+        self.d_router.on_retire(i)
+        if self.pcache is not None:
+            self.pcache.invalidate(i)
+
     def _retire(self, i: int, t: float) -> None:
         """Cancel a still-warming replica: it never took traffic; billing
         stops now (the partial warmup was still paid for)."""
@@ -372,12 +437,19 @@ class _ClusterEngine:
         rep.retired = t
         self.scale_events.append(
             {"t": t, "action": "cancel", "replica": i, "pool": rep.pool})
+        self._on_retired(i)
 
     def _drain(self, i: int, t: float) -> None:
         rep = self.reps[i]
         rep.drain_start = t
         self.scale_events.append(
             {"t": t, "action": "drain", "replica": i, "pool": rep.pool})
+        if self.pcache is not None:
+            # the cache dies with the replica: a draining replica admits
+            # nothing new, so its warmth is unreachable from here on and
+            # the re-warm cost lands on whichever replicas inherit the
+            # traffic (autoscale churn is no longer free)
+            self.pcache.invalidate(i)
         if rep.pool == "decode":
             # queued-but-unstarted KV handoffs re-route to the surviving
             # decode replicas; the cache sits on the draining replica, so
@@ -468,6 +540,14 @@ class _ClusterEngine:
 
     # -------------------------------------------------------------- dispatch
     def _dispatch(self, req: SimRequest, t: float, attempt: int) -> None:
+        if self.pcache is not None:
+            # a request re-entering dispatch (drain requeue, shed retry)
+            # may carry hit/miss accounting from a dispatch whose prefill
+            # never ran — retract it; only the dispatch that actually
+            # serves the request counts
+            prev = self._counted.pop(req.rid, None)
+            if prev is not None:
+                self.pcache.uncount(*prev)
         elig = [i for i, r in enumerate(self.reps)
                 if r.pool == self.arrival_pool and r.accepting(t)]
         assert elig, "fleet invariant violated: no accepting replica"
@@ -484,6 +564,14 @@ class _ClusterEngine:
                 self.shed.append(req)
             return
         i, cached = self.router.pick(req, views)
+        if self.pcache is not None:
+            # modeled residency overrides any router-side discount: the
+            # lookup counts the hit, then reserves this request's own
+            # prefix on the replica (the prefill that materializes it is
+            # now scheduled there), evicting LRU entries to fit
+            cached = self.pcache.use(i, req, t)
+            if prefix_key(req) is not None:
+                self._counted[req.rid] = (i, cached)
         # retried / drain-requeued requests re-enter at the dispatch time
         # (a replica's clock may lag global time when idle, and admission
         # must not predate the re-dispatch); cluster records are stitched
@@ -517,6 +605,12 @@ class _ClusterEngine:
                 # report instead of the replica-local staged wait
                 ttft = rec.first_token - self.orig[rec.rid].arrival
                 self.router.observe(i, rec.finish, ttft)
+                if self.pcache is not None:
+                    # the prefill completed at the FIRST token (decode
+                    # continues after, but the prefix KV became resident
+                    # then): refresh recency at that instant so colocated
+                    # and disaggregated pools age entries identically
+                    self.pcache.commit(i, self.orig[rec.rid], rec.first_token)
                 for sc in self._signal_scalers:
                     sc.observe_ttft(rec.finish, ttft)
             if pool_scaler is not None and rec.admitted >= 0:
@@ -561,9 +655,10 @@ class _ClusterEngine:
             self.xfer_seconds += dt
 
     def _check_drained(self) -> None:
-        for rep in self.reps:
+        for i, rep in enumerate(self.reps):
             if rep.draining and rep.retired < 0 and not rep.sim.has_work:
                 rep.retired = max(rep.sim.now, rep.drain_start)
+                self._on_retired(i)
 
     def _advance_all(self, t: float) -> None:
         """Advance every replica to `t` in lockstep (least-clock first),
@@ -693,11 +788,14 @@ class _ClusterEngine:
             assignments={k: tuple(v) for k, v in self.assignments.items()},
             xfer_count=self.xfer_count, xfer_bytes=self.xfer_bytes,
             xfer_seconds=self.xfer_seconds,
-            prefix_hits=(self.router.hits
+            prefix_hits=(self.pcache.hits if self.pcache is not None
+                         else self.router.hits
                          if isinstance(self.router, AffinityRouter) else 0),
             replica_specs=[rep.spec for rep in self.reps],
             replica_spans=spans, scale_events=self.scale_events,
-            shed=list(self.shed), retries=self.retries)
+            shed=list(self.shed), retries=self.retries,
+            cache_stats=(self.pcache.stats() if self.pcache is not None
+                         else None))
 
 
 def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
@@ -778,6 +876,14 @@ def summarize_cluster(cres: ClusterResult, *, slo_ttft: float | None = None,
     total = len(cres.records) + len(cres.shed)
     out["shed_frac"] = len(cres.shed) / total if total else 0.0
     out["retries"] = cres.retries
+    if cres.cache_stats is not None:
+        cs = cres.cache_stats
+        looked = cs["hits"] + cs["misses"]
+        out["cache_hit_tokens"] = cs["hit_tokens"]
+        out["cache_hit_rate"] = cs["hits"] / looked if looked else 0.0
+        out["cache_resident_gb"] = cs["peak_resident_bytes"] / 1e9
+        out["cache_evictions"] = cs["evictions_lru"] + cs["evictions_ttl"]
+        out["cache_invalidations"] = cs["invalidations"]
     out["scale_events"] = len(cres.scale_events)
     out["peak_replicas"] = cres.peak_replicas
     out["replica_hours"] = cres.replica_hours

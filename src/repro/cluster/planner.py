@@ -29,6 +29,7 @@ from repro.cluster.cluster import (
     simulate_cluster,
     summarize_cluster,
 )
+from repro.cluster.prefixcache import PrefixCacheConfig
 
 # $/device-hour, on-demand cloud ballparks (ranking inputs, not quotes)
 DEFAULT_PRICE_PER_DEV_HR = {
@@ -150,6 +151,9 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
                   min_replicas: int = 1, max_replicas: int = 8,
                   modes=("colocated", "disaggregated"),
                   price_table: dict | None = None,
+                  prefix_cache: PrefixCacheConfig | None = None,
+                  cache_fracs: tuple | None = None,
+                  cache_ttl: float | None = None,
                   early_stop: bool = True) -> dict:
     """Sweep replica count / pool split at `qps`; return {"rows", "best"}.
 
@@ -157,13 +161,28 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
     at the target rate), so rows are comparable point-for-point. A row is
     feasible when its `goodput_frac >= attainment`. With `early_stop`,
     each mode stops growing the cluster once a feasible size is found —
-    larger clusters of the same hardware only cost more."""
+    larger clusters of the same hardware only cost more.
+
+    The prefix-cache budget share is a CAPACITY DIMENSION of the sweep:
+    pass `cache_fracs=(0.05, 0.1, 0.2)` and every topology is evaluated
+    once per budget share (`PrefixCacheConfig(budget_frac=f,
+    ttl=cache_ttl)`), with `cache_frac` recorded on the row — more cache
+    means more prefill skipped but less KV for live sequences, and the
+    sweep finds where that trade clears the SLO cheapest. Alternatively
+    `prefix_cache=` fixes one explicit config for all candidates; the
+    default (both None) keeps the legacy unconditional-discount model."""
     sched = sched or SchedConfig()
     reqs = replace(workload, qps=qps).generate()
     cost_cache: dict = {}
     rows: list[dict] = []
+    if cache_fracs:  # empty/None both fall back to the single-config path
+        cache_cfgs = [PrefixCacheConfig(budget_frac=float(f), ttl=cache_ttl)
+                      for f in cache_fracs]
+    else:
+        cache_cfgs = [prefix_cache]  # may be None: legacy model
 
-    def candidate(mode: str, n_prefill: int, n_decode: int) -> dict:
+    def candidate(mode: str, n_prefill: int, n_decode: int,
+                  pc: PrefixCacheConfig | None) -> dict:
         n = n_prefill + n_decode
         pools = (["mixed"] * n if mode == "colocated"
                  else ["prefill"] * n_prefill + ["decode"] * n_decode)
@@ -172,10 +191,13 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
                         ctx_quantum=ctx_quantum, kv_block_tokens=kv_block_tokens)
             for pool in pools)
         spec = ClusterSpec(replicas=replicas, router=router,
-                           decode_router=decode_router, hit_frac=hit_frac)
+                           decode_router=decode_router, hit_frac=hit_frac,
+                           prefix_cache=pc)
         row = {"mode": mode, "replicas": n,
                "prefill": n_prefill if mode == "disaggregated" else 0,
                "decode": n_decode if mode == "disaggregated" else 0,
+               "cache_frac": (None if pc is None or pc.budget_bytes is not None
+                              else pc.budget_frac),
                "cost_per_hr": cluster_price_per_hr(spec, price_table)}
         try:
             cres = simulate_cluster(reqs, cfg, spec, _cost_cache=cost_cache)
@@ -190,6 +212,9 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
             preemptions=s["preemptions"],
             util_mean=sum(s["replica_util"]) / len(s["replica_util"]),
             feasible=s["goodput_frac"] >= attainment)
+        if cres.cache_stats is not None:
+            row["cache_hit_tokens"] = s["cache_hit_tokens"]
+            row["cache_evictions"] = s["cache_evictions"]
         return row
 
     for mode in modes:
@@ -199,9 +224,10 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
                       if mode == "disaggregated" else [(0, n)])
             feasible_here = False
             for n_p, n_d in splits:
-                row = candidate(mode, n_p, n_d)
-                rows.append(row)
-                feasible_here |= row["feasible"]
+                for pc in cache_cfgs:
+                    row = candidate(mode, n_p, n_d, pc)
+                    rows.append(row)
+                    feasible_here |= row["feasible"]
             if feasible_here and early_stop:
                 break
 

@@ -9,8 +9,18 @@ seed yields a fixed assignment.
 `affinity` additionally models the prefix/session cache that affinity
 routing exists to exploit: a request landing on the replica that last
 served its session skips `hit_frac` of its prompt prefill (the prefix is
-already resident), entering the replica with `cached` tokens. Cache
-capacity/eviction is not modeled yet — see ROADMAP.
+already resident), entering the replica with `cached` tokens. With
+`ClusterSpec.prefix_cache` set, the discount is no longer unconditional:
+the cluster engine binds a `FleetPrefixCache` to the router
+(`bind_cache`), placement becomes residency-aware (explicit prefix
+groups are steered to the warmest replica), and the cached-token count
+is computed by the ENGINE from actually resident prefix bytes under a
+finite budget with LRU + TTL eviction — see
+`repro.cluster.prefixcache`.
+
+Routers are notified when a replica retires (`on_retire`): affinity
+drops the session pins homed on it and slo_debt drops its observation
+window, so long autoscaled runs don't accrete state for dead replicas.
 
 `slo_debt` closes the loop on outcomes instead of state: the cluster
 engine feeds completed requests' TTFTs back via `observe()`, and the
@@ -65,7 +75,12 @@ class Router:
 
     `observe(idx, t, ttft)` is the cluster engine's outcome feedback
     channel: replica `idx` completed a request at time `t` (s) with the
-    given end-to-end TTFT (s). Stateless policies ignore it."""
+    given end-to-end TTFT (s). Stateless policies ignore it.
+
+    `on_retire(idx)` is the lifecycle hook: replica `idx` left the fleet
+    for good (drained or cancelled) and will never appear in `views`
+    again, so any per-replica router state keyed on it can be pruned.
+    Replica indices are never reused within a run."""
 
     name = "base"
 
@@ -73,6 +88,9 @@ class Router:
         raise NotImplementedError
 
     def observe(self, idx: int, t: float, ttft: float) -> None:
+        pass
+
+    def on_retire(self, idx: int) -> None:
         pass
 
 
@@ -110,7 +128,18 @@ class AffinityRouter(Router):
     First request of a session is placed join-shortest-queue and pins the
     session to that replica; subsequent requests follow it and enter with
     `hit_frac` of their prompt already cached (capped at prompt - 1: the
-    final prompt token always runs, it produces the first logits)."""
+    final prompt token always runs, it produces the first logits).
+    Following the home replica with a 0-token discount (e.g. a 1-token
+    prompt, or `int(prompt * hit_frac) == 0`) counts as a MISS — the hit
+    counter reports realized discounts, not placement affinity.
+
+    With a bound `FleetPrefixCache` (`bind_cache`, set by the cluster
+    engine when `ClusterSpec.prefix_cache` is given) the router only does
+    PLACEMENT — session home first, then the replica holding the most
+    resident tokens of the request's explicit prefix group, then
+    join-shortest-queue — and returns 0 cached tokens: the engine
+    computes the discount from actual residency (and keeps the hit/miss
+    stats on the cache)."""
 
     name = "affinity"
 
@@ -119,21 +148,58 @@ class AffinityRouter(Router):
             raise ValueError("hit_frac must be in [0, 1)")
         self.hit_frac = float(hit_frac)
         self._home: dict[int, int] = {}
+        self.cache = None  # FleetPrefixCache, bound by the cluster engine
         self.hits = 0
         self.misses = 0
+
+    def bind_cache(self, cache) -> None:
+        """Switch from the unconditional discount to modeled residency:
+        `cache` informs placement; the engine computes the hit sizes."""
+        self.cache = cache
+
+    def _warmest(self, req, views):
+        """The view holding the most resident tokens of `req`'s explicit
+        prefix group (ties: shallowest queue, least KV, lowest idx), or
+        None when the group is cold everywhere eligible OR the warm
+        replica is already loaded well past the JSQ choice — popular
+        prefixes must not herd the whole fleet's traffic onto one replica
+        (re-prefilling the prefix elsewhere is cheaper than the queueing
+        tail, and the re-prefill warms a second copy)."""
+        scored = [(self.cache.resident_tokens(v.idx, req, v.now), v)
+                  for v in views]
+        tokens, v = max(scored,
+                        key=lambda tv: (tv[0], -tv[1].depth, -tv[1].kv_used,
+                                        -tv[1].idx))
+        if tokens <= 0:
+            return None
+        jsq = min(views, key=lambda v: (v.depth, v.kv_used, v.idx))
+        return v if v.depth <= jsq.depth + 1 else None
 
     def pick(self, req, views):
         eligible = {v.idx for v in views}
         home = self._home.get(req.session, -1) if req.session >= 0 else -1
         if home in eligible:
-            self.hits += 1
-            cached = min(int(req.prompt * self.hit_frac), req.prompt - 1)
-            return home, max(cached, 0)
-        self.misses += 1
-        v = min(views, key=lambda v: (v.depth, v.kv_used, v.idx))
+            if self.cache is not None:
+                return home, 0  # discount computed by the engine
+            cached = max(min(int(req.prompt * self.hit_frac), req.prompt - 1), 0)
+            if cached > 0:
+                self.hits += 1
+            else:
+                self.misses += 1
+            return home, cached
+        v = None
+        if self.cache is not None and req.prefix_group >= 0:
+            v = self._warmest(req, views)
+        if v is None:
+            v = min(views, key=lambda v: (v.depth, v.kv_used, v.idx))
         if req.session >= 0:
             self._home[req.session] = v.idx
+        if self.cache is None:
+            self.misses += 1
         return v.idx, 0
+
+    def on_retire(self, idx):
+        self._home = {s: r for s, r in self._home.items() if r != idx}
 
 
 class SLODebtRouter(Router):
@@ -161,6 +227,12 @@ class SLODebtRouter(Router):
     def debt(self, idx: int, now: float) -> float:
         w = self._obs.get(idx)
         return w.frac(now) if w is not None else 0.0
+
+    def on_retire(self, idx):
+        # a retired replica never reappears in views: its window would
+        # otherwise sit in _obs forever (unbounded growth on long diurnal
+        # traces with many joins/leaves)
+        self._obs.pop(idx, None)
 
     def pick(self, req, views):
         now = max(v.now for v in views)

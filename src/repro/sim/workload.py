@@ -29,8 +29,12 @@ seconds to come online must target (pass `Workload.peak_rate` as
 Trace JSONL rows: {"arrival": s, "prompt": n, "output": m} — the aliases
 "arrival_s", "prompt_tokens"/"input_tokens", "output_tokens" are accepted
 (the inference-perf trace convention); optional "session" and "slo_ttft"
-keys feed affinity routing and EDF admission. Rows without "arrival" get
-arrivals from the configured arrival process.
+keys feed affinity routing and EDF admission, and optional
+"prefix_group"/"prefix_len" keys mark a shared prompt prefix (system
+prompt / few-shot header) for the modeled prefix cache. Rows without
+"arrival" get arrivals from the configured arrival process. Synthetic
+specs generate shared prefixes via `num_prefix_groups` (each group draws
+one prefix length from the `prefix` distribution).
 
 For multi-replica experiments that need *independent* per-replica streams
 (rather than one shared stream split by a router), `substreams(n)` shards
@@ -55,6 +59,10 @@ class SimRequest:
     output: int  # tokens to generate (>= 1)
     session: int = -1  # session/prefix-affinity key (-1 = none)
     slo_ttft: float | None = None  # per-request TTFT deadline offset (EDF)
+    prefix_group: int = -1  # shared-prefix group id (-1 = none); the first
+    prefix_len: int = 0  # `prefix_len` prompt tokens are the group's shared
+    #                      prefix (system prompt / few-shot header), reusable
+    #                      across sessions by the modeled prefix cache
 
 
 @dataclass(frozen=True)
@@ -93,6 +101,12 @@ class Workload:
     trace_path: str | None = None
     num_sessions: int = 0  # >0: assign each request a session id in [0, n)
     slo_ttft: float | tuple | None = None  # scalar, or tuple sampled per request
+    # shared-prefix groups (multi-tenant system prompts / few-shot headers):
+    # each request joins a group in [0, n); each GROUP draws one prefix
+    # length from `prefix` — the shared head of every member's prompt,
+    # reusable across sessions by repro.cluster's modeled prefix cache
+    num_prefix_groups: int = 0
+    prefix: LengthDist = field(default_factory=lambda: LengthDist("fixed", 256.0))
     # diurnal envelope: mean rate stays `qps`, peak is qps * (1 + amp)
     diurnal_period: float = 240.0  # seconds per (compressed) day
     diurnal_amp: float = 0.8  # relative swing, in [0, 1]
@@ -113,10 +127,22 @@ class Workload:
         sessions = (rng.integers(0, self.num_sessions, size=self.num_requests)
                     if self.num_sessions > 0 else None)
         slos = self._sample_slos(rng, self.num_requests)
+        groups = plens = None
+        if self.num_prefix_groups > 0:
+            # one prefix length per GROUP (all members share the same
+            # header), then a group per request; a request's cacheable
+            # prefix is capped at prompt - 1 (the final token always runs)
+            group_len = self.prefix.sample(rng, self.num_prefix_groups)
+            groups = rng.integers(0, self.num_prefix_groups,
+                                  size=self.num_requests)
+            plens = np.minimum(group_len[groups],
+                               np.maximum(prompts - 1, 0))
         return [
             SimRequest(i, float(arrivals[i]), int(prompts[i]), max(int(outputs[i]), 1),
                        session=int(sessions[i]) if sessions is not None else -1,
-                       slo_ttft=slos[i])
+                       slo_ttft=slos[i],
+                       prefix_group=int(groups[i]) if groups is not None else -1,
+                       prefix_len=int(plens[i]) if plens is not None else 0)
             for i in range(self.num_requests)
         ]
 
@@ -298,10 +324,15 @@ class Workload:
             slo = row.get("slo_ttft")
             if slo is None and isinstance(self.slo_ttft, (int, float)):
                 slo = float(self.slo_ttft)
-            reqs.append(SimRequest(i, float(arrival), max(int(prompt), 1),
+            prompt_n = max(int(prompt), 1)
+            group = int(row.get("prefix_group", -1))
+            plen = min(max(int(row.get("prefix_len", 0)), 0), prompt_n - 1) \
+                if group >= 0 else 0
+            reqs.append(SimRequest(i, float(arrival), prompt_n,
                                    max(int(output), 1),
                                    session=int(row.get("session", -1)),
-                                   slo_ttft=slo))
+                                   slo_ttft=slo,
+                                   prefix_group=group, prefix_len=plen))
         reqs.sort(key=lambda r: (r.arrival, r.rid))
         return reqs
 

@@ -248,15 +248,35 @@ def test_affinity_hit_accounting_and_single_token_prompt_cap():
     assert (idx, cached) == (0, 90)
     assert (router.hits, router.misses) == (1, 2)
     # a 1-token prompt can never be fully cached: the final prompt token
-    # must run to produce the first logits -> cached caps at prompt - 1 = 0
+    # must run to produce the first logits -> cached caps at prompt - 1 = 0.
+    # A 0-token discount is NOT a hit, even though placement followed home
+    # (the hit counter reports realized discounts, not placement affinity)
     idx, cached = router.pick(SimRequest(3, 0.0, 1, 2, session=7), views)
     assert (idx, cached) == (0, 0)
-    assert router.hits == 2  # still counted as a hit (placement followed home)
+    assert (router.hits, router.misses) == (1, 3)
     # 2-token prompt at hit_frac=0.9: int(1.8) = 1 <= prompt - 1
     assert router.pick(SimRequest(4, 0.0, 2, 2, session=7), views) == (0, 1)
+    assert router.hits == 2
     # a home replica that left the eligible set is a miss and re-pins
     assert router.pick(SimRequest(5, 0.0, 100, 2, session=7), views[1:])[0] == 1
-    assert router.misses == 3
+    assert router.misses == 4
+
+
+def test_affinity_zero_token_discount_counts_as_miss():
+    # regression (PR 5): pick() used to count a hit whenever placement
+    # followed home, even when the discount resolved to 0 cached tokens
+    # (int(prompt * hit_frac) == 0), inflating the reported hit rate
+    router = make_router("affinity", hit_frac=0.1)
+    views = [ReplicaView(i, 0.0, 0, 0, 0.0, 1.0) for i in range(2)]
+    router.pick(SimRequest(0, 0.0, 8, 2, session=3), views)  # pins
+    # int(4 * 0.1) == 0: home followed, but nothing was actually skipped
+    idx, cached = router.pick(SimRequest(1, 0.0, 4, 2, session=3), views)
+    assert (idx, cached) == (0, 0)
+    assert (router.hits, router.misses) == (0, 2)
+    # a request with a real discount still counts
+    idx, cached = router.pick(SimRequest(2, 0.0, 40, 2, session=3), views)
+    assert (idx, cached) == (0, 4)
+    assert (router.hits, router.misses) == (1, 2)
 
 
 def test_slo_debt_router_feedback_steers_traffic():

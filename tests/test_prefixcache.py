@@ -1,0 +1,391 @@
+"""repro.cluster.prefixcache: bit-for-bit parity of the infinite-budget
+cache with the legacy unconditional `hit_frac` discount, budget/hit
+invariants across seeds, LRU + TTL eviction mechanics, cross-session
+prefix sharing, drain invalidation (autoscale churn pays a re-warm
+cost), router state pruning on retire, shared-prefix workload
+generation, and 6-sig-fig goldens for the cache-aware affinity summary."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.sim import LengthDist, SchedConfig, SimRequest, Workload
+from repro.cluster import (
+    AutoscaleConfig,
+    ClusterSpec,
+    PrefixCacheConfig,
+    ReplicaPrefixCache,
+    ReplicaSpec,
+    ReplicaView,
+    make_router,
+    plan_capacity,
+    simulate_cluster,
+    summarize_cluster,
+)
+from repro.cluster.cluster import _ClusterEngine
+from repro.cluster.prefixcache import prefix_cap, prefix_key
+
+CFG = get_config("qwen3_14b")
+INF_CACHE = PrefixCacheConfig(budget_bytes=math.inf, ttl=None)
+
+
+def _wl(**kw):
+    base = dict(
+        qps=50.0, num_requests=40, arrival="poisson",
+        prompt=LengthDist("lognormal", 96, 0.4, lo=8, hi=512),
+        output=LengthDist("lognormal", 24, 0.4, lo=2, hi=128),
+        seed=0, num_sessions=6,
+    )
+    base.update(kw)
+    return Workload(**base)
+
+
+def _spec(pools, *, sched=None, router="affinity", **kw):
+    sched = sched or SchedConfig(slots=8)
+    return ClusterSpec(
+        replicas=tuple(ReplicaSpec(hw="h100", pool=p, sched=sched,
+                                   ctx_quantum=32) for p in pools),
+        router=router, **kw)
+
+
+def _records_key(cres):
+    return [(r.rid, r.admitted, r.first_token, r.finish)
+            for r in sorted(cres.records, key=lambda r: r.rid)]
+
+
+class _UnitCost:
+    """Stub cost model: 1 byte per resident token (unit arithmetic)."""
+
+    def kv_bytes(self, ctx, *, exact=False):
+        return float(max(int(ctx), 0))
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("pools", [["mixed"] * 3,
+                                   ["prefill", "prefill", "decode", "decode"]])
+@pytest.mark.parametrize("hit_frac", [0.5, 0.9])
+def test_infinite_cache_reproduces_unconditional_discount(pools, hit_frac):
+    # the acceptance contract: an infinite-budget, no-TTL cache with
+    # per-session prefix groups IS the legacy hit_frac affinity router —
+    # same assignments, same records, same summary, same hit count
+    reqs = _wl().generate()
+    legacy = simulate_cluster(reqs, CFG, _spec(pools, hit_frac=hit_frac))
+    cached = simulate_cluster(
+        reqs, CFG, _spec(pools, hit_frac=hit_frac, prefix_cache=INF_CACHE))
+    assert cached.assignments == legacy.assignments
+    assert _records_key(cached) == _records_key(legacy)
+    assert cached.prefix_hits == legacy.prefix_hits
+    sa = summarize_cluster(legacy, slo_ttft=2.0, slo_tpot=0.05)
+    sb = summarize_cluster(cached, slo_ttft=2.0, slo_tpot=0.05)
+    for k in ("ttft_p95", "tpot_p95", "goodput_frac", "tokens_per_s",
+              "iterations", "preemptions", "prefix_hits"):
+        assert sb[k] == sa[k], k
+    # the cache never evicted or expired anything
+    assert cached.cache_stats["evictions_lru"] == 0
+    assert cached.cache_stats["evictions_ttl"] == 0
+
+
+# -------------------------------------------------------- cache mechanics
+def test_lru_eviction_under_byte_budget():
+    c = ReplicaPrefixCache(budget=100.0, ttl=None, cost=_UnitCost())
+    g = [SimRequest(i, 0.0, 200, 4, prefix_group=i, prefix_len=40)
+         for i in range(4)]
+    assert c.use(g[0], 1.0, 0.5) == 0  # cold miss inserts group 0
+    assert c.use(g[1], 2.0, 0.5) == 0
+    assert c.used_bytes == 80.0
+    assert c.use(g[2], 3.0, 0.5) == 0  # 120 > 100: evicts LRU (group 0)
+    assert c.evictions_lru == 1 and c.used_bytes == 80.0
+    assert c.use(g[0], 4.0, 0.5) == 0  # group 0 is gone -> miss again
+    assert c.use(g[2], 5.0, 0.5) == 40  # group 2 survived (recently used)
+    assert c.peak_bytes <= c.budget
+
+
+def test_ttl_expiry_and_recency_refresh():
+    c = ReplicaPrefixCache(budget=1e9, ttl=10.0, cost=_UnitCost())
+    req = SimRequest(0, 0.0, 200, 4, prefix_group=1, prefix_len=64)
+    c.use(req, 0.0, 0.5)
+    assert c.resident_tokens(req, 9.0, 0.5) == 64  # within TTL
+    assert c.resident_tokens(req, 11.0, 0.5) == 0  # expired (read-only)
+    c.commit(req, 8.0)  # prefill completion refreshes recency
+    assert c.resident_tokens(req, 17.0, 0.5) == 64
+    assert c.use(req, 30.0, 0.5) == 0  # expired for real: swept + re-inserted
+    assert c.evictions_ttl == 1
+
+
+def test_oversized_prefix_is_rejected_not_inserted():
+    c = ReplicaPrefixCache(budget=32.0, ttl=None, cost=_UnitCost())
+    req = SimRequest(0, 0.0, 200, 4, prefix_group=0, prefix_len=64)
+    assert c.use(req, 0.0, 0.5) == 0
+    assert c.rejected == 1 and c.used_bytes == 0.0
+    assert c.resident_tokens(req, 1.0, 0.5) == 0
+
+
+def test_session_entries_pin_whole_context():
+    # a session entry models the conversation KV staying resident: the
+    # follow-up's hit is capped by its OWN hit_frac share, whatever the
+    # earlier turn's prompt was (what makes infinite-budget parity exact)
+    c = ReplicaPrefixCache(budget=1e9, ttl=None, cost=_UnitCost())
+    c.use(SimRequest(0, 0.0, 10, 4, session=3), 0.0, 0.5)
+    big = SimRequest(1, 0.0, 1000, 4, session=3)
+    assert c.use(big, 1.0, 0.5) == 500  # int(1000 * 0.5), not 10
+
+
+# ---------------------------------------------------------- property tests
+def test_budget_and_hit_invariants_across_seeds():
+    # resident bytes never exceed the budget, and a hit never exceeds the
+    # request's own cacheable prefix or the tokens actually resident at
+    # lookup time — across seeds, budgets, and TTLs
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        budget = float(rng.integers(50, 400))
+        ttl = None if seed % 2 else float(rng.integers(2, 20))
+        c = ReplicaPrefixCache(budget=budget, ttl=ttl, cost=_UnitCost())
+        t = 0.0
+        for i in range(300):
+            t += float(rng.exponential(1.0))
+            prompt = int(rng.integers(1, 300))
+            if rng.random() < 0.5:
+                req = SimRequest(i, t, prompt, 4,
+                                 prefix_group=int(rng.integers(0, 8)),
+                                 prefix_len=min(int(rng.integers(0, 200)),
+                                                prompt - 1))
+            else:
+                req = SimRequest(i, t, prompt, 4,
+                                 session=int(rng.integers(0, 8)))
+            resident = c.resident_tokens(req, t, 0.5)
+            hit = c.use(req, t, 0.5)
+            assert hit == resident  # use() realizes exactly what was resident
+            assert hit <= prefix_cap(req, 0.5) <= max(prompt - 1, 0)
+            assert c.used_bytes <= c.budget + 1e-9
+            assert c.peak_bytes <= c.budget + 1e-9
+            if rng.random() < 0.05:
+                c.invalidate()
+                assert c.used_bytes == 0.0 and not c.entries
+
+
+def test_cluster_run_respects_per_replica_budgets_across_seeds():
+    for seed in (0, 1, 2):
+        reqs = _wl(seed=seed, num_requests=48, num_sessions=4,
+                   num_prefix_groups=3,
+                   prefix=LengthDist("fixed", 64.0)).generate()
+        pc = PrefixCacheConfig(budget_frac=0.001, ttl=1.0)
+        cres = simulate_cluster(reqs, CFG, _spec(["mixed"] * 3, prefix_cache=pc))
+        for st in cres.cache_stats["per_replica"].values():
+            assert st["peak_resident_bytes"] <= st["budget_bytes"] + 1e-6
+        # the carve-out shrank the live-sequence budget, and it still held
+        for rep in cres.replica_results:
+            assert rep.peak_kv <= rep.kv_capacity
+        assert sorted(r.rid for r in cres.records) == list(range(48))
+
+
+# -------------------------------------------------- cross-session sharing
+def test_prefix_group_shared_across_sessions():
+    # two sessions share one system prompt: the second session's FIRST
+    # request is steered to the warm replica and skips the group prefix —
+    # impossible under the per-session legacy model
+    reqs = [
+        SimRequest(0, 0.00, 256, 2, session=0, prefix_group=0, prefix_len=128),
+        SimRequest(1, 0.01, 300, 2, session=1, prefix_group=0, prefix_len=128),
+    ]
+    cres = simulate_cluster(
+        reqs, CFG, _spec(["mixed"] * 2, prefix_cache=INF_CACHE))
+    assert cres.assignments[1] == cres.assignments[0]  # steered to warmth
+    assert cres.prefix_hits == 1
+    assert cres.cache_stats["hit_tokens"] == 128
+    # legacy model: different sessions never share
+    legacy = simulate_cluster(reqs, CFG, _spec(["mixed"] * 2))
+    assert legacy.prefix_hits == 0
+
+
+def test_finite_budget_loses_hits_vs_infinite():
+    reqs = _wl(num_requests=60, num_sessions=8, num_prefix_groups=4,
+               prefix=LengthDist("fixed", 64.0)).generate()
+    inf = simulate_cluster(reqs, CFG, _spec(["mixed"] * 2,
+                                            prefix_cache=INF_CACHE))
+    tiny = simulate_cluster(
+        reqs, CFG,
+        _spec(["mixed"] * 2,
+              prefix_cache=PrefixCacheConfig(budget_frac=0.0005)))
+    assert tiny.cache_stats["evictions_lru"] > 0
+    assert tiny.cache_stats["hit_tokens"] < inf.cache_stats["hit_tokens"]
+
+
+# ------------------------------------------------- drain / retire semantics
+def _drain_run(prefix_cache):
+    # a burst (scale-up) then silence with a lone straggler: the rate
+    # tracker drains the extra replicas once the burst passes, so at
+    # least one accepting replica drains mid-run
+    reqs = [SimRequest(i, 0.1 * i, 96, 16, session=i % 20) for i in range(40)]
+    reqs.append(SimRequest(40, 30.0, 96, 4, session=0))
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=4,
+                          interval=0.25, window=1.0,
+                          target_qps_per_replica=4.0, warmup=0.5)
+    spec = _spec(["mixed"], prefix_cache=prefix_cache)
+    eng = _ClusterEngine(spec, CFG, asc, {})
+    eng.run(sorted(reqs, key=lambda r: (r.arrival, r.rid)))
+    return eng, eng.result()
+
+
+def test_drain_invalidates_cache_and_rewarms():
+    eng, cres = _drain_run(INF_CACHE)
+    drains = [e for e in cres.scale_events if e["action"] == "drain"]
+    assert drains, "scenario must actually drain a replica"
+    assert cres.cache_stats["invalidations"] >= 1
+    # invalidated replicas hold nothing; sessions re-warm elsewhere
+    for i, cache in eng.pcache.caches.items():
+        if eng.reps[i].retired >= 0 or eng.reps[i].draining:
+            assert not cache.entries
+    assert sorted(r.rid for r in cres.records) == list(range(41))
+    # hit accounting is per SERVED request: drain requeues retract the
+    # count from the dispatch whose prefill never ran (all 41 requests
+    # carry a session, so each is counted exactly once)
+    cs = cres.cache_stats
+    assert cs["hits"] + cs["misses"] == 41
+
+
+def test_routers_prune_state_on_retire():
+    # the lifecycle hook: retired replicas vanish from AffinityRouter._home
+    eng, cres = _drain_run(INF_CACHE)
+    retired = {i for i, rep in enumerate(eng.reps) if rep.retired >= 0}
+    assert retired, "scenario must actually retire a replica"
+    assert not retired & set(eng.router._home.values())
+    assert eng.router._home, "live sessions stay pinned"
+
+
+def test_on_retire_hooks_prune_router_state_directly():
+    views = [ReplicaView(i, 0.0, 0, 0, 0.0, 1.0) for i in range(3)]
+    aff = make_router("affinity", hit_frac=0.5)
+    for s, reqid in ((0, 0), (1, 1)):
+        aff.pick(SimRequest(reqid, 0.0, 64, 2, session=s), views[s:s + 1])
+    assert set(aff._home.values()) == {0, 1}
+    aff.on_retire(0)
+    assert aff._home == {1: 1}  # session 0's pin went with the replica
+    debt = make_router("slo_debt", slo_ttft=1.0, debt_window=10.0)
+    debt.observe(0, 1.0, 5.0)
+    debt.observe(2, 1.0, 5.0)
+    assert set(debt._obs) == {0, 2}
+    debt.on_retire(0)
+    assert set(debt._obs) == {2}
+    debt.on_retire(7)  # unknown idx is a no-op
+    base = make_router("jsq")
+    base.on_retire(0)  # stateless policies ignore the hook
+
+
+# ------------------------------------------------------ workload generation
+def test_prefix_groups_do_not_perturb_base_stream():
+    # adding prefix groups draws AFTER everything else: arrivals, lengths,
+    # sessions, and SLOs are bit-identical to the group-free spec
+    plain = _wl(slo_ttft=(1.0, 2.0)).generate()
+    grouped = _wl(slo_ttft=(1.0, 2.0), num_prefix_groups=4,
+                  prefix=LengthDist("lognormal", 128.0, 0.5)).generate()
+    for a, b in zip(plain, grouped):
+        assert (a.arrival, a.prompt, a.output, a.session, a.slo_ttft) == \
+            (b.arrival, b.prompt, b.output, b.session, b.slo_ttft)
+        assert (a.prefix_group, a.prefix_len) == (-1, 0)
+        assert 0 <= b.prefix_group < 4
+        assert 0 <= b.prefix_len <= b.prompt - 1
+    # one prefix length per GROUP, deterministic in the seed
+    by_group = {}
+    for r in grouped:
+        by_group.setdefault(r.prefix_group, set()).add(
+            r.prefix_len if r.prefix_len < r.prompt - 1 else "capped")
+    assert grouped == _wl(slo_ttft=(1.0, 2.0), num_prefix_groups=4,
+                          prefix=LengthDist("lognormal", 128.0, 0.5)).generate()
+
+
+def test_trace_replay_parses_prefix_fields(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text(
+        '{"arrival": 0.0, "prompt": 100, "output": 4, "prefix_group": 2, '
+        '"prefix_len": 64}\n'
+        '{"arrival": 0.5, "prompt": 10, "output": 4, "prefix_group": 2, '
+        '"prefix_len": 64}\n'
+        '{"arrival": 1.0, "prompt": 50, "output": 4}\n')
+    reqs = Workload(trace_path=str(p)).generate()
+    assert (reqs[0].prefix_group, reqs[0].prefix_len) == (2, 64)
+    assert (reqs[1].prefix_group, reqs[1].prefix_len) == (2, 9)  # capped
+    assert (reqs[2].prefix_group, reqs[2].prefix_len) == (-1, 0)
+
+
+def test_prefix_key_and_cap_precedence():
+    r = SimRequest(0, 0.0, 100, 4, session=3, prefix_group=5, prefix_len=30)
+    assert prefix_key(r) == ("g", 5)  # explicit group wins over session
+    assert prefix_cap(r, 0.9) == 30
+    s = SimRequest(1, 0.0, 100, 4, session=3)
+    assert prefix_key(s) == ("s", 3)
+    assert prefix_cap(s, 0.9) == 90
+    assert prefix_key(SimRequest(2, 0.0, 100, 4)) is None
+    assert prefix_cap(SimRequest(3, 0.0, 1, 4, session=3), 0.9) == 0
+
+
+# --------------------------------------------------------------- validation
+def test_prefix_cache_config_validation():
+    with pytest.raises(ValueError, match="budget_frac"):
+        PrefixCacheConfig(budget_frac=1.0).validate()
+    with pytest.raises(ValueError, match="budget_bytes"):
+        PrefixCacheConfig(budget_bytes=-1.0).validate()
+    with pytest.raises(ValueError, match="ttl"):
+        PrefixCacheConfig(ttl=0.0).validate()
+    PrefixCacheConfig(budget_frac=0.0).validate()  # 0 = cache disabled
+    assert INF_CACHE.infinite
+    assert not PrefixCacheConfig(budget_frac=0.5).infinite
+    assert PrefixCacheConfig(budget_bytes=1e9).budget_for(5e9) == 1e9
+    assert PrefixCacheConfig(budget_frac=0.2).budget_for(5e9) == 1e9
+    static = SchedConfig(policy="static", slots=8)
+    with pytest.raises(ValueError, match="mid-stream"):
+        simulate_cluster([], CFG, _spec(["mixed"], sched=static, router="jsq",
+                                        prefix_cache=INF_CACHE))
+
+
+# --------------------------------------------------------- golden regression
+def _sig6(x: float) -> float:
+    return float(f"{x:.6g}")
+
+
+def test_golden_cache_aware_affinity_summary_pinned():
+    # fixed-seed cache-aware runs pinned to 6 significant figures: catches
+    # silent drift in cache/eviction/carve-out arithmetic that behavioral
+    # tests cannot see. If a deliberate model change moves these, re-pin
+    # in the same PR and say why in the commit message.
+    reqs = _wl(num_requests=48, num_sessions=6, num_prefix_groups=3,
+               prefix=LengthDist("fixed", 64.0)).generate()
+    pc = PrefixCacheConfig(budget_frac=0.0005, ttl=5.0)
+    golden = {
+        ("mixed", "mixed"): dict(
+            ttft_p50=0.0437866,
+            ttft_p95=0.344535,
+            tpot_p50=0.01464,
+            tpot_p95=0.0172001,
+            e2e_mean=0.435831,
+            tokens_per_s=621.098,
+            goodput_frac=1.0,
+            makespan_s=1.83868,
+            cache_hit_tokens=1974.0,
+            cache_hit_rate=0.666667,
+            cache_resident_gb=0.0209715,
+            cache_evictions=12.0,
+            prefix_hits=32.0,
+        ),
+        ("prefill", "decode"): dict(
+            ttft_p50=0.0129687,
+            ttft_p95=0.0283952,
+            tpot_p50=0.0171579,
+            tpot_p95=0.0376659,
+            e2e_mean=0.504154,
+            tokens_per_s=583.706,
+            goodput_frac=0.979167,
+            makespan_s=1.95646,
+            cache_hit_tokens=2138.0,
+            cache_hit_rate=0.729167,
+            cache_resident_gb=0.0209715,
+            cache_evictions=11.0,
+            prefix_hits=35.0,
+        ),
+    }
+    for pools, want in golden.items():
+        cres = simulate_cluster(reqs, CFG, _spec(list(pools), prefix_cache=pc))
+        s = summarize_cluster(cres, slo_ttft=2.0, slo_tpot=0.05)
+        got = {k: _sig6(s[k]) for k in want}
+        assert got == want, f"golden drift for pools={pools}"
