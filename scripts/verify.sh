@@ -39,6 +39,20 @@ python -m repro.cluster --config qwen3_14b --hw h100 --qps 16 --requests 16 \
     --slots 4 --ctx-quantum 32 --plan --plan-max-replicas 2 \
     --router affinity --sessions 4 --plan-cache-fracs 0.05,0.2
 python examples/prefix_cache.py
+# trace smoke: a traced autoscaled run must export valid Chrome JSON, and
+# a JSONL trace must validate and round-trip through the offline analyzer
+TRACE_DIR="$(mktemp -d)"
+trap 'rm -rf "$TRACE_DIR"' EXIT
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 24 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode disaggregated \
+    --arrival diurnal --diurnal-period 20 --autoscale --max-replicas 3 \
+    --scale-interval 1 --target-qps 12 --trace "$TRACE_DIR/t.json"
+python -c "import json, sys; json.load(open(sys.argv[1]))" "$TRACE_DIR/t.json"
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 16 \
+    --requests 12 --slots 4 --ctx-quantum 32 --mode colocated \
+    --trace "$TRACE_DIR/t.jsonl"
+python -m repro.obs report "$TRACE_DIR/t.jsonl" --validate-only
+python -m repro.obs report "$TRACE_DIR/t.jsonl"
 
 # docs: the generated CLI reference must match the parsers; links resolve
 python scripts/gen_cli_docs.py --check

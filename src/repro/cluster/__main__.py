@@ -25,14 +25,23 @@ absolute), LRU + TTL eviction (`--cache-ttl`), and cross-session sharing
 of the workload's prefix groups (`--prefix-groups`/`--prefix-len`
 generate multi-tenant system prompts). `--plan-cache-fracs` sweeps the
 budget share as a capacity dimension of `--plan`.
+
+`--trace out.json` records the run: request lifecycle spans, per-replica
+counter timelines, and explainable autoscale decisions, exported by
+suffix (.json = Chrome trace-event for Perfetto, .jsonl = event log for
+`python -m repro.obs report`, .csv = windowed time series); verbosity via
+`--trace-level`. With `--mode both` the mode is suffixed into the
+filename (out.colocated.json, out.disaggregated.json).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 from dataclasses import replace
 
 from repro.configs import get_config
+from repro.obs import LEVELS, make_tracer, write_trace
 from repro.sim import ADMISSIONS, LengthDist, SchedConfig, Workload
 from repro.cluster import (
     AUTOSCALE_POLICIES,
@@ -99,7 +108,17 @@ def build_parser() -> argparse.ArgumentParser:
                         "in the workload (0 = none)")
     p.add_argument("--prefix-len", type=float, default=256,
                    help="tokens per shared group prefix (--prefix-groups)")
-    p.add_argument("--trace", default=None, help="JSONL trace to replay instead")
+    p.add_argument("--replay", default=None,
+                   help="JSONL workload trace to replay instead of the "
+                        "synthetic generator")
+    p.add_argument("--trace", default=None,
+                   help="record the run to this path: .json = Chrome "
+                        "trace-event (Perfetto), .jsonl = event log "
+                        "(repro.obs report), .csv = windowed time series")
+    p.add_argument("--trace-level", default="request", choices=list(LEVELS),
+                   help="trace verbosity ceiling (with --trace): summary = "
+                        "scaling/shed events, replica = + per-replica spans "
+                        "and counters, request = + per-request lifecycle")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--slo-ttft", type=float, default=2.0, help="seconds")
     p.add_argument("--slo-tpot", type=float, default=0.05, help="seconds/token")
@@ -187,11 +206,11 @@ def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
     cfg = get_config(args.config)
     wl = Workload(
-        name=args.trace or "synthetic", qps=args.qps, num_requests=args.requests,
+        name=args.replay or "synthetic", qps=args.qps, num_requests=args.requests,
         arrival=args.arrival,
         prompt=LengthDist(args.prompt_dist, args.prompt_mean, args.prompt_sigma),
         output=LengthDist(args.output_dist, args.output_mean, args.output_sigma),
-        seed=args.seed, trace_path=args.trace, num_sessions=args.sessions,
+        seed=args.seed, trace_path=args.replay, num_sessions=args.sessions,
         diurnal_period=args.diurnal_period, diurnal_amp=args.diurnal_amp,
         rate_path=args.rate_path, num_prefix_groups=args.prefix_groups,
         prefix=LengthDist("fixed", args.prefix_len))
@@ -231,6 +250,9 @@ def main(argv=None) -> None:
             autoscale = _pool_cfg(args.autoscale_policy)
 
     if args.plan:
+        if args.trace:
+            print("# note: --trace records single runs; the --plan sweep "
+                  "is untraced")
         hws = [h.strip() for h in args.hw.split(",") if h.strip()]
         if len(hws) > 1:
             print(f"# note: --plan sweeps homogeneous fleets; using {hws[0]!r} "
@@ -320,8 +342,10 @@ def main(argv=None) -> None:
                            retry_after=args.retry_after,
                            max_retries=args.max_retries,
                            prefix_cache=pcache)
+        tracer = make_tracer(args.trace_level if args.trace else "off")
         try:
-            cres = simulate_cluster(reqs, cfg, spec, autoscale=autoscale)
+            cres = simulate_cluster(reqs, cfg, spec, autoscale=autoscale,
+                                    tracer=tracer)
         except ValueError as e:
             print(f"{mode:<14} (skipped: {e})")
             continue
@@ -329,6 +353,14 @@ def main(argv=None) -> None:
         results[mode] = (spec, cres, s)
         label = mode if mode == "colocated" else f"disagg {n_p}P/{n - n_p}D"
         print(_fmt_row(label, s))
+        if tracer.enabled:
+            path = args.trace
+            if len(modes) > 1:
+                root, ext = os.path.splitext(path)
+                path = f"{root}.{mode}{ext or '.json'}"
+            fmt = write_trace(tracer.events, path, tracer.meta)
+            print(f"# trace [{fmt}, level={args.trace_level}]: "
+                  f"{len(tracer.events)} events -> {path}")
 
     for mode, (spec, cres, s) in results.items():
         dynamic = autoscale is not None

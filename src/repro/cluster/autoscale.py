@@ -315,6 +315,10 @@ class Autoscaler:
             raise ValueError(
                 "predictive policy needs service_time= on the config or a "
                 "cost model at Autoscaler construction")
+        # the inputs behind the most recent desired() call — what the
+        # tracer's autoscale.decision events record, so every scale-up/
+        # down in a trace is explainable from the policy's own signals
+        self.last_decision: dict = {}
 
     # ------------------------------------------------------------ observation
     def observe_arrival(self, t: float) -> None:
@@ -391,9 +395,12 @@ class Autoscaler:
         KV-occupancy fraction of the pool's accepting replicas at `now`
         (only the `kv_tpot` policy reads it)."""
         asc = self.asc
+        inputs: dict = {}
         if asc.policy == "rate":
-            want = math.ceil(self.observed_rate(now)
-                             / asc.target_qps_per_replica)
+            rate = self.observed_rate(now)
+            want = math.ceil(rate / asc.target_qps_per_replica)
+            inputs = {"rate": rate,
+                      "target_qps_per_replica": asc.target_qps_per_replica}
         elif asc.policy == "predictive":
             if asc.envelope is not None:
                 rate = asc.envelope(now, now + self.lookahead)
@@ -406,6 +413,10 @@ class Autoscaler:
                 if self.predicted_wait(rate, n) <= budget:
                     want = n
                     break
+            pw = self.predicted_wait(rate, want)
+            inputs = {"predicted_rate": rate, "wait_budget": budget,
+                      "predicted_wait": pw if pw != _INF else -1.0,
+                      "lookahead": self.lookahead}
         elif asc.policy == "queue_wait":
             wait = self.queue_wait(now)
             if wait > asc.wait_hi:
@@ -414,6 +425,8 @@ class Autoscaler:
                 want = provisioned - 1
             else:
                 want = provisioned
+            inputs = {"queue_wait": wait, "wait_hi": asc.wait_hi,
+                      "wait_lo": asc.wait_lo}
         elif asc.policy == "kv_tpot":
             debt = self.tpot_debt(now)
             if kv_frac > asc.kv_hi or debt > asc.debt_hi:
@@ -422,6 +435,8 @@ class Autoscaler:
                 want = provisioned - 1
             else:
                 want = provisioned
+            inputs = {"kv_frac": kv_frac, "tpot_debt": debt,
+                      "kv_hi": asc.kv_hi, "debt_hi": asc.debt_hi}
         else:  # slo_debt
             debt = self.slo_debt(now)
             if debt > asc.debt_hi:
@@ -430,4 +445,9 @@ class Autoscaler:
                 want = provisioned - 1
             else:
                 want = provisioned
-        return max(asc.min_replicas, min(asc.max_replicas, want))
+            inputs = {"slo_debt": debt, "debt_hi": asc.debt_hi,
+                      "debt_lo": asc.debt_lo}
+        clamped = max(asc.min_replicas, min(asc.max_replicas, want))
+        self.last_decision = {"policy": asc.policy, "provisioned": provisioned,
+                              **inputs, "want_raw": want, "want": clamped}
+        return clamped

@@ -73,6 +73,7 @@ from dataclasses import dataclass, field, replace
 from repro.configs.base import ModelConfig
 from repro.core import comm as C
 from repro.core.hardware import HardwareSpec, NetLevel, get_hardware
+from repro.obs.tracer import NULL_TRACER
 from repro.sim.costmodel import ServingCostModel
 from repro.sim.metrics import summarize_records
 from repro.sim.scheduler import ReplicaSim, ReqRecord, SchedConfig, SimResult
@@ -211,6 +212,11 @@ class ClusterResult:
     retries: int = 0
     # modeled-prefix-cache counters (None when the cache is not modeled)
     cache_stats: dict | None = None
+    # the trace's time frame: simulation origin and the instant the last
+    # replica went quiet — the same end that clamps `replica_spans`, so
+    # billing windows and exported trace tracks share one clock
+    t0: float = 0.0
+    horizon: float = 0.0
 
     @property
     def makespan(self) -> float:
@@ -220,15 +226,29 @@ class ClusterResult:
                 - min(r.arrival for r in self.records))
 
     @property
+    def span(self) -> float:
+        """Billable wall span: `horizon - t0`. Unlike `makespan` (first
+        arrival to last finish, a records-only view) this covers the whole
+        provisioned timeline, including drains that outlive the last
+        completion, and matches the trace's track extents exactly."""
+        if self.horizon > self.t0:
+            return self.horizon - self.t0
+        return self.makespan  # hand-built results without a horizon
+
+    @property
     def replica_hours(self) -> float:
         """Provisioned replica-hours actually billed (warmup included)."""
         return sum(e - s for s, e in self.replica_spans) / 3600.0
 
     @property
     def replica_hours_static_peak(self) -> float:
-        """The counterfactual bill: the peak-concurrency fleet held for the
-        whole makespan (what static provisioning for this trace costs)."""
-        return self.peak_replicas * self.makespan / 3600.0
+        """The counterfactual bill: the peak-concurrency fleet held for
+        the whole trace span (what static provisioning for this trace
+        costs). Billed over `span`, the same origin->horizon window the
+        real `replica_spans` are billed over — pricing the counterfactual
+        over the shorter records-makespan used to understate it, skewing
+        `savings_frac` for fleets whose drains outlive the last finish."""
+        return self.peak_replicas * self.span / 3600.0
 
     @property
     def peak_replicas(self) -> int:
@@ -299,10 +319,18 @@ class _ClusterEngine:
     feedback to the router and autoscaler, drain progress)."""
 
     def __init__(self, spec: ClusterSpec, cfg: ModelConfig,
-                 autoscale: AutoscaleConfig | dict | None, cache: dict):
+                 autoscale: AutoscaleConfig | dict | None, cache: dict,
+                 tracer=None):
         self.spec = spec
         self.cfg = cfg
         self.cache = cache
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # hoisted level gates (tracing is purely observational: a traced
+        # run executes the identical schedule as an untraced one)
+        self._tr_sum = self.tracer.wants("summary")
+        self._tr_rep = self.tracer.wants("replica")
+        self._tr_req = self.tracer.wants("request")
+        self._handoff_log: dict[int, list[tuple[float, float, float]]] = {}
         self.disagg = spec.disaggregated
         self.arrival_pool = "prefill" if self.disagg else "mixed"
         self.router = spec.make_router(spec.router)
@@ -404,7 +432,8 @@ class _ClusterEngine:
                 sched = replace(sched, kv_capacity=seq_cap)
             self.pcache.register(len(self.reps), budget, cost)
         rep = _Rep(sim=ReplicaSim(cost, sched,
-                                  name=f"r{len(self.reps)}:{pool}"),
+                                  name=f"r{len(self.reps)}:{pool}",
+                                  tracer=self.tracer),
                    spec=rs, cost=cost, pool=pool, started=started, ready=ready)
         self.reps.append(rep)
         return rep
@@ -418,6 +447,9 @@ class _ClusterEngine:
         self.scale_events.append(
             {"t": t, "action": "add", "replica": self.reps.index(rep),
              "pool": pool, "ready": rep.ready})
+        if self._tr_sum:
+            self.tracer.instant("scale.up", t, rep.sim.name, pool=pool,
+                                replica=self.reps.index(rep), ready=rep.ready)
 
     def _on_retired(self, i: int) -> None:
         """Replica `i` has left the fleet for good: routers prune their
@@ -437,6 +469,9 @@ class _ClusterEngine:
         rep.retired = t
         self.scale_events.append(
             {"t": t, "action": "cancel", "replica": i, "pool": rep.pool})
+        if self._tr_sum:
+            self.tracer.instant("scale.cancel", t, rep.sim.name,
+                                pool=rep.pool, replica=i)
         self._on_retired(i)
 
     def _drain(self, i: int, t: float) -> None:
@@ -444,11 +479,19 @@ class _ClusterEngine:
         rep.drain_start = t
         self.scale_events.append(
             {"t": t, "action": "drain", "replica": i, "pool": rep.pool})
+        if self._tr_sum:
+            self.tracer.instant("scale.down", t, rep.sim.name,
+                                pool=rep.pool, replica=i)
         if self.pcache is not None:
             # the cache dies with the replica: a draining replica admits
             # nothing new, so its warmth is unreachable from here on and
             # the re-warm cost lands on whichever replicas inherit the
             # traffic (autoscale churn is no longer free)
+            if self._tr_sum and i in self.pcache.caches:
+                self.tracer.instant(
+                    "cache.invalidate", t, rep.sim.name, pool=rep.pool,
+                    replica=i,
+                    dropped_bytes=self.pcache.caches[i].used_bytes)
             self.pcache.invalidate(i)
         if rep.pool == "decode":
             # queued-but-unstarted KV handoffs re-route to the surviving
@@ -465,6 +508,9 @@ class _ClusterEngine:
                 self.xfer_count += 1
                 self.xfer_bytes += nbytes
                 self.xfer_seconds += dt
+                if self._tr_req:
+                    self._handoff_log.setdefault(orig.rid, []).append(
+                        (t, t + dt, nbytes))
             return
         for req in rep.sim.evict_pending():
             # stage requests (disagg prefill pushes output=1) map back to
@@ -518,6 +564,11 @@ class _ClusterEngine:
         kv_pool = "decode" if self.disagg else self.arrival_pool
         want = self.scaler.desired(t, len(provisioned),
                                    kv_frac=self._pool_kv_frac(kv_pool, t))
+        if self._tr_sum:
+            self.tracer.instant("autoscale.decision", t,
+                                pool=self.arrival_pool if not self.disagg
+                                else "fleet",
+                                **self.scaler.last_decision)
         if self.disagg:
             base_p = len(self.spec.pool_indices("prefill"))
             base_d = len(self.spec.pool_indices("decode"))
@@ -536,6 +587,9 @@ class _ClusterEngine:
         provisioned = len(self._pool_counts(pool))
         want = scaler.desired(t, provisioned,
                               kv_frac=self._pool_kv_frac(pool, t))
+        if self._tr_sum:
+            self.tracer.instant("autoscale.decision", t, pool=pool,
+                                **scaler.last_decision)
         self._scale_pool(pool, want, t)
 
     # -------------------------------------------------------------- dispatch
@@ -560,8 +614,17 @@ class _ClusterEngine:
                                (t + self.spec.retry_after, self.seq,
                                 attempt + 1, req))
                 self.seq += 1
+                if self._tr_sum:
+                    self.tracer.instant("request.retry", t, rid=req.rid,
+                                        attempt=attempt + 1,
+                                        retry_at=t + self.spec.retry_after)
             else:
                 self.shed.append(req)
+                if self._tr_sum:
+                    # terminal: shed outright, or dropped after retries
+                    self.tracer.instant(
+                        "request.drop" if attempt > 0 else "request.shed",
+                        t, rid=req.rid, reason="queue_full", attempts=attempt)
             return
         i, cached = self.router.pick(req, views)
         if self.pcache is not None:
@@ -572,6 +635,14 @@ class _ClusterEngine:
             cached = self.pcache.use(i, req, t)
             if prefix_key(req) is not None:
                 self._counted[req.rid] = (i, cached)
+            if self._tr_rep:
+                self.tracer.counter("cache_bytes", t,
+                                    self.pcache.caches[i].used_bytes,
+                                    self.reps[i].sim.name)
+        if self._tr_req:
+            self.tracer.instant("dispatch", t, self.reps[i].sim.name,
+                                rid=req.rid, replica=i, attempt=attempt,
+                                cached=cached, **self.router.last_pick)
         # retried / drain-requeued requests re-enter at the dispatch time
         # (a replica's clock may lag global time when idle, and admission
         # must not predate the re-dispatch); cluster records are stitched
@@ -611,6 +682,10 @@ class _ClusterEngine:
                     # then): refresh recency at that instant so colocated
                     # and disaggregated pools age entries identically
                     self.pcache.commit(i, self.orig[rec.rid], rec.first_token)
+                    if self._tr_rep and i in self.pcache.caches:
+                        self.tracer.counter(
+                            "cache_bytes", rec.first_token,
+                            self.pcache.caches[i].used_bytes, rep.sim.name)
                 for sc in self._signal_scalers:
                     sc.observe_ttft(rec.finish, ttft)
             if pool_scaler is not None and rec.admitted >= 0:
@@ -653,12 +728,19 @@ class _ClusterEngine:
             self.xfer_count += 1
             self.xfer_bytes += nbytes
             self.xfer_seconds += dt
+            if self._tr_req:
+                self._handoff_log.setdefault(req.rid, []).append(
+                    (rec.finish, rec.finish + dt, nbytes))
 
     def _check_drained(self) -> None:
         for i, rep in enumerate(self.reps):
             if rep.draining and rep.retired < 0 and not rep.sim.has_work:
                 rep.retired = max(rep.sim.now, rep.drain_start)
                 self._on_retired(i)
+                if self._tr_sum:
+                    self.tracer.instant("replica.retired", rep.retired,
+                                        rep.sim.name, pool=rep.pool,
+                                        replica=i)
 
     def _advance_all(self, t: float) -> None:
         """Advance every replica to `t` in lockstep (least-clock first),
@@ -781,6 +863,8 @@ class _ClusterEngine:
         spans = [(rep.started,
                   max(rep.started, rep.retired if rep.retired >= 0 else end))
                  for rep in self.reps]
+        if self.tracer.enabled:
+            self._emit_trace(records, spans, end, mode)
         return ClusterResult(
             mode=mode, records=records,
             replica_results=[rep.sim.res for rep in self.reps],
@@ -795,12 +879,61 @@ class _ClusterEngine:
             replica_spans=spans, scale_events=self.scale_events,
             shed=list(self.shed), retries=self.retries,
             cache_stats=(self.pcache.stats() if self.pcache is not None
-                         else None))
+                         else None),
+            t0=0.0, horizon=end)
+
+    def _emit_trace(self, records, spans, end: float, mode: str) -> None:
+        """Post-run trace emission: replica structural spans (billing
+        tracks, identical to `replica_spans`) and stitched per-request
+        lifecycle spans ending in exactly one terminal instant."""
+        tr = self.tracer
+        tr.meta.update(t0=0.0, horizon=end, mode=mode)
+        if self._tr_rep:
+            for rep, (s, e) in zip(self.reps, spans):
+                track = rep.sim.name
+                tr.span("provisioned", s, e, track, pool=rep.pool)
+                if rep.ready > s:
+                    tr.span("warmup", s, min(rep.ready, e), track)
+                if rep.draining:
+                    drain0 = min(rep.drain_start, e)
+                    tr.span("drain", drain0, e, track)
+        if not self._tr_req:
+            return
+        by_rid = {rec.rid: rec for rec in records}
+        for req in self.orig.values():
+            rec = by_rid.get(req.rid)
+            if rec is None:
+                continue  # shed/dropped: terminal already emitted live
+            rid = req.rid
+            serve_i, dec_i = self.assignments.get(rid, (-1, -1))
+            track = self.reps[serve_i].sim.name if serve_i >= 0 else ""
+            if rec.admitted >= 0:
+                tr.span("queued", req.arrival, rec.admitted, track, rid=rid)
+            if rec.first_token >= 0 and rec.admitted >= 0:
+                tr.span("prefill", rec.admitted, rec.first_token, track,
+                        rid=rid)
+            dec = self.decode_recs.get(rid) if self.disagg else None
+            if dec is not None:
+                dtrack = self.reps[dec_i].sim.name if dec_i >= 0 else ""
+                for h0, h1, nbytes in self._handoff_log.get(rid, ()):
+                    tr.span("handoff", h0, h1, dtrack, rid=rid, bytes=nbytes)
+                if dec.admitted >= 0:
+                    tr.span("decode_wait", dec.arrival, dec.admitted, dtrack,
+                            rid=rid)
+                    tr.span("decode", dec.admitted, dec.finish, dtrack,
+                            rid=rid)
+                track = dtrack
+            elif not self.disagg and rec.finish >= 0 and rec.first_token >= 0:
+                tr.span("decode", rec.first_token, rec.finish, track, rid=rid)
+            if rec.finish >= 0:
+                tr.instant("request.complete", rec.finish, track, rid=rid,
+                           ttft=rec.ttft, tpot=rec.tpot, e2e=rec.e2e)
 
 
 def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
                      spec: ClusterSpec, *,
                      autoscale: AutoscaleConfig | dict | None = None,
+                     tracer=None,
                      _cost_cache: dict | None = None) -> ClusterResult:
     """Co-simulate the cluster over one shared arrival stream.
 
@@ -819,6 +952,9 @@ def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
             (already warm). A pinned control loop (`min == max == N`)
             reproduces the static cluster step-for-step — in fleet-wide
             AND pool-aware mode (regression-tested).
+        tracer: a `repro.obs.Tracer` to record the run (None = untraced;
+            tracing is purely observational and never changes the
+            schedule — also regression-tested).
         _cost_cache: lets sweeps (the capacity planner) share memoized
             `ServingCostModel`s across many cluster candidates.
 
@@ -846,7 +982,7 @@ def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
                     f"got {type(asc).__name__} for pool {pool!r}")
             asc.validate()
     cache = _cost_cache if _cost_cache is not None else {}
-    engine = _ClusterEngine(spec, cfg, autoscale, cache)
+    engine = _ClusterEngine(spec, cfg, autoscale, cache, tracer)
     engine.run(sorted(requests, key=lambda r: (r.arrival, r.rid)))
     return engine.result()
 
@@ -888,6 +1024,10 @@ def summarize_cluster(cres: ClusterResult, *, slo_ttft: float | None = None,
     out["peak_replicas"] = cres.peak_replicas
     out["replica_hours"] = cres.replica_hours
     out["replica_hours_static_peak"] = cres.replica_hours_static_peak
+    # the trace frame: exported timelines, billing spans, and this summary
+    # all share one clock (origin t0, last-replica-quiet horizon)
+    out["t0"] = cres.t0
+    out["horizon"] = cres.horizon
     return out
 
 

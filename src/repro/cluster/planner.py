@@ -68,9 +68,12 @@ def provisioning_summary(cres, table: dict | None = None, *,
 
     `replica_hours` bills each replica for its provisioned span (warmup and
     drain tails included); the static-peak counterfactual runs the maximum
-    concurrently-provisioned fleet for the whole makespan — what you'd have
-    to deploy without an autoscaler to survive the trace's peak. The
-    savings fraction is the autoscaling headline number on diurnal traces.
+    concurrently-provisioned fleet for the whole trace span (`cres.span`,
+    origin to the last replica going quiet — the same window the real
+    spans are billed over and the same frame an exported trace renders,
+    reported back as `t0`/`horizon`) — what you'd have to deploy without
+    an autoscaler to survive the trace's peak. The savings fraction is
+    the autoscaling headline number on diurnal traces.
 
     Args:
         cres: a `ClusterResult`.
@@ -89,7 +92,7 @@ def provisioning_summary(cres, table: dict | None = None, *,
         breakdown {pool: {replica_hours, cost_usd, peak_replicas}} so
         pool-aware autoscaling bills prefill and decode separately."""
     prices = [replica_price_per_hr(rs, table) for rs in cres.replica_specs]
-    span = cres.makespan
+    span = cres.span
     cost = sum(p * (e - s) / 3600.0
                for p, (s, e) in zip(prices, cres.replica_spans))
     # static peak $: the max concurrent price rate, held for the whole span
@@ -115,6 +118,8 @@ def provisioning_summary(cres, table: dict | None = None, *,
         "shed": len(cres.shed),
         "shed_cost_usd": shed_cost,
         "cost_usd_total": cost + shed_cost,
+        "t0": cres.t0,
+        "horizon": cres.horizon if cres.horizon > cres.t0 else cres.t0 + span,
         "pools": pools,
     }
 

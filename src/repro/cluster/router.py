@@ -80,9 +80,15 @@ class Router:
     `on_retire(idx)` is the lifecycle hook: replica `idx` left the fleet
     for good (drained or cancelled) and will never appear in `views`
     again, so any per-replica router state keyed on it can be pruned.
-    Replica indices are never reused within a run."""
+    Replica indices are never reused within a run.
+
+    `last_pick` holds a flat dict explaining the most recent `pick()` —
+    the policy's name plus whatever drove the choice (queue depth, KV
+    fraction, session home, SLO debt). The cluster tracer attaches it to
+    dispatch events so every placement in a trace is explainable."""
 
     name = "base"
+    last_pick: dict = {}
 
     def pick(self, req: SimRequest, views: list[ReplicaView]) -> tuple[int, int]:
         raise NotImplementedError
@@ -103,6 +109,7 @@ class RoundRobinRouter(Router):
     def pick(self, req, views):
         v = views[self._i % len(views)]
         self._i += 1
+        self.last_pick = {"router": self.name, "slot": self._i - 1}
         return v.idx, 0
 
 
@@ -111,6 +118,7 @@ class JoinShortestQueueRouter(Router):
 
     def pick(self, req, views):
         v = min(views, key=lambda v: (v.depth, v.kv_used, v.idx))
+        self.last_pick = {"router": self.name, "depth": v.depth}
         return v.idx, 0
 
 
@@ -119,6 +127,8 @@ class LeastKVLoadRouter(Router):
 
     def pick(self, req, views):
         v = min(views, key=lambda v: (v.kv_frac, v.depth, v.idx))
+        self.last_pick = {"router": self.name, "kv_frac": v.kv_frac,
+                          "depth": v.depth}
         return v.idx, 0
 
 
@@ -180,22 +190,29 @@ class AffinityRouter(Router):
         home = self._home.get(req.session, -1) if req.session >= 0 else -1
         if home in eligible:
             if self.cache is not None:
+                self.last_pick = {"router": self.name, "why": "session_home"}
                 return home, 0  # discount computed by the engine
             cached = max(min(int(req.prompt * self.hit_frac), req.prompt - 1), 0)
             if cached > 0:
                 self.hits += 1
             else:
                 self.misses += 1
+            self.last_pick = {"router": self.name, "why": "session_home",
+                              "hit_tokens": cached}
             return home, cached
         v = None
+        why = "jsq_fallback"
         if self.cache is not None and req.prefix_group >= 0:
             v = self._warmest(req, views)
+            if v is not None:
+                why = "warmest_prefix"
         if v is None:
             v = min(views, key=lambda v: (v.depth, v.kv_used, v.idx))
         if req.session >= 0:
             self._home[req.session] = v.idx
         if self.cache is None:
             self.misses += 1
+        self.last_pick = {"router": self.name, "why": why, "depth": v.depth}
         return v.idx, 0
 
     def on_retire(self, idx):
@@ -238,6 +255,8 @@ class SLODebtRouter(Router):
         now = max(v.now for v in views)
         v = min(views, key=lambda v: (self.debt(v.idx, now), v.depth,
                                       v.kv_used, v.idx))
+        self.last_pick = {"router": self.name, "debt": self.debt(v.idx, now),
+                          "depth": v.depth}
         return v.idx, 0
 
 

@@ -1,0 +1,28 @@
+"""repro.obs — observability for the serving simulators.
+
+Event tracing (`Tracer`, spans/instants/counters with trace levels),
+streaming percentiles (`StreamingQuantiles`, P² body + exact tails),
+windowed aggregation, trace exporters (Chrome trace-event JSON for
+Perfetto, JSONL event log, windowed CSV), and an offline report analyzer
+(`python -m repro.obs report trace.jsonl`).
+
+See docs/observability.md for the event schema and workflow.
+"""
+
+from .quantiles import (PCTS, P2Quantile, StreamingQuantiles,
+                        WindowedAggregator, pct_key, percentile_summary)
+from .tracer import (LEVELS, NULL_TRACER, STRUCTURAL_SPANS, TERMINALS,
+                     NullTracer, Tracer, make_tracer, validate_trace)
+from .export import (csv_rows, read_jsonl, to_chrome, write_chrome,
+                     write_csv, write_jsonl, write_trace)
+from .report import analyze, render, report_file
+
+__all__ = [
+    "PCTS", "P2Quantile", "StreamingQuantiles", "WindowedAggregator",
+    "pct_key", "percentile_summary",
+    "LEVELS", "NULL_TRACER", "STRUCTURAL_SPANS", "TERMINALS",
+    "NullTracer", "Tracer", "make_tracer", "validate_trace",
+    "csv_rows", "read_jsonl", "to_chrome", "write_chrome", "write_csv",
+    "write_jsonl", "write_trace",
+    "analyze", "render", "report_file",
+]

@@ -1,0 +1,55 @@
+"""CLI: offline trace analysis.
+
+    python -m repro.obs report trace.jsonl [--topk 10] [--validate-only]
+
+Consumes the JSONL trace format written by `--trace out.jsonl` on
+`python -m repro.sim` / `python -m repro.cluster` (schema repro.obs/1)
+and prints the latency summary, slowest-request breakdown, per-replica
+utilization, and scaling-decision timeline. `--validate-only` runs just
+the structural validator and exits non-zero on problems (the CI gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .export import read_jsonl
+from .report import analyze, render
+from .tracer import validate_trace
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Offline analysis of repro.obs JSONL traces.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rep = sub.add_parser(
+        "report", help="summarize a JSONL trace: latency percentiles, "
+        "slowest requests, per-replica utilization, scaling timeline")
+    rep.add_argument("trace", help="path to a .jsonl trace written by --trace")
+    rep.add_argument("--topk", type=int, default=10,
+                     help="how many slowest requests to show (default 10)")
+    rep.add_argument("--validate-only", action="store_true",
+                     help="only run the structural trace validator; exit "
+                     "non-zero if the trace is malformed")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    meta, events = read_jsonl(args.trace)
+    if args.validate_only:
+        problems = validate_trace(events)
+        if problems:
+            for p in problems:
+                print(f"! {p}", file=sys.stderr)
+            return 1
+        print(f"ok: {len(events)} events, schema {meta.get('schema', '?')}")
+        return 0
+    print(render(analyze(events, meta, topk=args.topk)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,6 +38,7 @@ from repro.sim.scheduler import (
     ReqRecord,
     SchedConfig,
     SimResult,
+    emit_record_spans,
     simulate,
 )
 from repro.sim.workload import LengthDist, SimRequest, Workload, to_engine_requests
@@ -54,6 +55,7 @@ __all__ = [
     "SimResult",
     "Workload",
     "dominates",
+    "emit_record_spans",
     "pareto_sweep",
     "simulate",
     "summarize",

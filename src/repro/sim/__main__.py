@@ -4,14 +4,19 @@
 
 Prints TTFT/TPOT/e2e percentiles, goodput, and tokens/s per scheduler
 policy, then the static-vs-continuous throughput-latency sweep.
+`--trace out.json` records one policy's run (request lifecycle spans +
+per-iteration counters) for Perfetto (.json), `repro.obs report`
+(.jsonl), or spreadsheets (.csv).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 
 from repro.configs import get_config
 from repro.core.hardware import get_hardware
+from repro.obs import LEVELS, make_tracer, write_trace
 from repro.sim import (
     ADMISSIONS,
     LengthDist,
@@ -48,7 +53,17 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--output-dist", default="lognormal", choices=["fixed", "lognormal"])
     p.add_argument("--output-mean", type=float, default=128)
     p.add_argument("--output-sigma", type=float, default=0.4)
-    p.add_argument("--trace", default=None, help="JSONL trace to replay instead")
+    p.add_argument("--replay", default=None,
+                   help="JSONL workload trace to replay instead of the "
+                        "synthetic generator")
+    p.add_argument("--trace", default=None,
+                   help="record the run to this path: .json = Chrome "
+                        "trace-event (Perfetto), .jsonl = event log "
+                        "(repro.obs report), .csv = windowed time series; "
+                        "with --policy all, the policy is suffixed into "
+                        "the filename")
+    p.add_argument("--trace-level", default="request", choices=list(LEVELS),
+                   help="trace verbosity ceiling (with --trace)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--policy", default="all", choices=list(POLICIES) + ["all"])
     p.add_argument("--slots", type=int, default=16)
@@ -75,14 +90,14 @@ def main(argv=None) -> None:
                             ctx_quantum=args.ctx_quantum,
                             kv_block_tokens=args.block_tokens)
     wl = Workload(
-        name=args.trace or "synthetic",
+        name=args.replay or "synthetic",
         qps=args.qps,
         num_requests=args.requests,
         arrival=args.arrival,
         prompt=LengthDist(args.prompt_dist, args.prompt_mean, args.prompt_sigma),
         output=LengthDist(args.output_dist, args.output_mean, args.output_sigma),
         seed=args.seed,
-        trace_path=args.trace,
+        trace_path=args.replay,
         diurnal_period=args.diurnal_period,
         diurnal_amp=args.diurnal_amp,
         rate_path=args.rate_path,
@@ -110,8 +125,17 @@ def main(argv=None) -> None:
         sc = SchedConfig(policy=policy, slots=args.slots,
                          token_budget=args.token_budget, kv_capacity=kv_cap,
                          admission=args.admission, slo_ttft=args.slo_ttft)
-        s = summarize(simulate(reqs, cost, sc),
+        tracer = make_tracer(args.trace_level if args.trace else "off")
+        s = summarize(simulate(reqs, cost, sc, tracer=tracer),
                       slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
+        if tracer.enabled:
+            path = args.trace
+            if len(policies) > 1:
+                root, ext = os.path.splitext(path)
+                path = f"{root}.{policy}{ext or '.json'}"
+            fmt = write_trace(tracer.events, path, tracer.meta)
+            print(f"# trace [{fmt}, level={args.trace_level}]: "
+                  f"{len(tracer.events)} events -> {path}")
         print(f"{policy:<11} "
               f"{s['ttft_p50']:>6.2f}/{s['ttft_p95']:.2f}/{s['ttft_p99']:.2f}  "
               f"{s['tpot_p50'] * 1e3:>6.1f}/{s['tpot_p95'] * 1e3:.1f}/{s['tpot_p99'] * 1e3:.1f}  "

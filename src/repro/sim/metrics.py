@@ -9,6 +9,10 @@ normalized by makespan.
 `summarize_records` aggregates any collection of `ReqRecord`s — one
 replica's, one pool's, or a whole cluster's stitched records — so
 `repro.sim` and `repro.cluster` report the same vocabulary at every level.
+Percentile keys and interpolation come from `repro.obs.quantiles`
+(`PCTS` = p50/p95/p99/p99.9, numpy linear interpolation), the same
+convention the streaming estimators in `repro.obs` reproduce, so offline
+trace analysis and in-sim summaries can never disagree on definitions.
 """
 
 from __future__ import annotations
@@ -17,9 +21,11 @@ from dataclasses import replace
 
 import numpy as np
 
+from repro.obs.quantiles import PCTS, percentile_summary
 from repro.sim.scheduler import SchedConfig, SimResult, simulate
 
-PCTS = (50, 95, 99)
+__all__ = ["PCTS", "summarize_records", "summarize", "pareto_sweep",
+           "dominates"]
 
 
 def summarize_records(records, *, span: float | None = None,
@@ -36,9 +42,7 @@ def summarize_records(records, *, span: float | None = None,
                 if recs else 0.0)
     out: dict = {"requests": len(recs)}
     for name, xs in (("ttft", ttft), ("tpot", tpot), ("e2e", e2e)):
-        for p in PCTS:
-            out[f"{name}_p{p}"] = float(np.percentile(xs, p)) if len(xs) else 0.0
-        out[f"{name}_mean"] = float(xs.mean()) if len(xs) else 0.0
+        out.update(percentile_summary(xs, name))
     total_tokens = sum(r.output for r in recs)
     denom = max(span, 1e-12)
     out["makespan_s"] = span

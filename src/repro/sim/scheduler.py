@@ -50,6 +50,7 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass
 
+from repro.obs.tracer import NULL_TRACER
 from repro.sim.costmodel import ServingCostModel
 from repro.sim.workload import SimRequest
 
@@ -150,7 +151,7 @@ class ReplicaSim:
     """One serving replica as a steppable discrete-event simulation."""
 
     def __init__(self, cost: ServingCostModel, sc: SchedConfig | None = None,
-                 *, name: str = ""):
+                 *, name: str = "", tracer=None):
         sc = sc or SchedConfig()
         if sc.policy not in POLICIES:
             raise ValueError(f"unknown policy {sc.policy!r}; choose from {POLICIES}")
@@ -166,6 +167,10 @@ class ReplicaSim:
         self.cost = cost
         self.sc = sc
         self.name = name
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # hoisted level gates: the untraced hot path pays one bool test
+        self._tr_rep = self.tracer.wants("replica")
+        self._tr_req = self.tracer.wants("request")
         self.cap = sc.kv_capacity if sc.kv_capacity is not None else cost.kv_capacity_bytes
         self.now = 0.0
         self.res = SimResult(sc.policy, [], [], kv_capacity=self.cap)
@@ -305,6 +310,15 @@ class ReplicaSim:
     def _next_arrival(self) -> float:
         return min(r.req.arrival for r in self._pending)
 
+    def _sample_counters(self) -> None:
+        """Replica-level counter timeline, sampled once per priced
+        iteration (guarded by the hoisted `_tr_rep` flag at call sites)."""
+        tr, t, track = self.tracer, self.now, self.name
+        tr.counter("queue", t, len(self._pending), track)
+        tr.counter("live", t, self.live, track)
+        tr.counter("kv_used", t, self.kv_used, track)
+        tr.counter("busy_s", t, self.res.busy_s, track)
+
     def _note_kv(self, contexts) -> None:
         """Update peak KV (allocation) and, under paging, peak waste."""
         alloc = sum(self.cost.kv_bytes(c) for c in contexts)
@@ -356,10 +370,14 @@ class ReplicaSim:
                 r.rec.finish = self.now
                 done.append(r.rec)
         if all(r.generated >= r.req.output for r in batch):
+            if self._tr_rep:
+                self._sample_counters()
             return done  # prefill-only batch; the engine goes idle
         self._batch = batch
         self._spad = s_pad
         self._k = 0
+        if self._tr_rep:
+            self._sample_counters()
         return done
 
     def _static_decode_step(self) -> list[ReqRecord]:
@@ -385,6 +403,8 @@ class ReplicaSim:
             self._batch = []
         if self.res.iterations > _MAX_ITERATIONS:
             raise RuntimeError("static simulation did not converge")
+        if self._tr_rep:
+            self._sample_counters()
         return done
 
     # ------------------------------------------------- continuous / chunked-prefill
@@ -448,6 +468,10 @@ class ReplicaSim:
             victim.cached = 0
             victim.rec.preemptions += 1
             res.preemptions += 1
+            if self._tr_req:
+                self.tracer.instant("preempt", self.now, self.name,
+                                    rid=victim.req.rid,
+                                    generated=victim.generated)
             pending.appendleft(victim)
             projected = sum(cost.kv_bytes(c) for c in planned.values())
         self._note_kv(list(planned.values()))
@@ -494,14 +518,39 @@ class ReplicaSim:
                     done.append(r.rec)
         if res.iterations > _MAX_ITERATIONS:
             raise RuntimeError("simulation did not converge (check token_budget/kv)")
+        if self._tr_rep:
+            self._sample_counters()
         return done
 
 
+def emit_record_spans(tracer, records, track: str = "") -> None:
+    """Emit single-replica lifecycle spans (queued -> prefill -> decode)
+    and a `request.complete` terminal for each finished record. The
+    cluster engine does NOT use this — it stitches richer disaggregated
+    lifecycles (handoff, decode_wait) itself in `_ClusterEngine.result`."""
+    for rec in records:
+        rid = rec.rid
+        if rec.admitted >= 0:
+            tracer.span("queued", rec.arrival, rec.admitted, track, rid=rid)
+        if rec.first_token >= 0 and rec.admitted >= 0:
+            tracer.span("prefill", rec.admitted, rec.first_token, track, rid=rid)
+        if rec.finish >= 0 and rec.first_token >= 0:
+            tracer.span("decode", rec.first_token, rec.finish, track, rid=rid)
+            tracer.instant("request.complete", rec.finish, track, rid=rid,
+                           ttft=rec.ttft, tpot=rec.tpot, e2e=rec.e2e)
+
+
 def simulate(requests: list[SimRequest], cost: ServingCostModel,
-             sc: SchedConfig | None = None) -> SimResult:
+             sc: SchedConfig | None = None, *, tracer=None) -> SimResult:
     """Run one replica to completion over a whole request list."""
-    sim = ReplicaSim(cost, sc)
+    tracer = tracer if tracer is not None else NULL_TRACER
+    sim = ReplicaSim(cost, sc, tracer=tracer)
     for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
         sim.push(r)
     sim.run()
+    if tracer.wants("request"):
+        emit_record_spans(tracer, sim.res.records)
+    if tracer.enabled:
+        tracer.meta.setdefault("t0", 0.0)
+        tracer.meta["horizon"] = max(tracer.meta.get("horizon", 0.0), sim.now)
     return sim.res

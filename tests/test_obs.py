@@ -1,0 +1,452 @@
+"""repro.obs: streaming-vs-exact percentile parity, tracer level gating,
+tracing-is-observational parity with untraced runs (including the pinned
+autoscaler), golden trace digests for the stable `repro.obs/1` schema,
+the structural validator, Chrome export invariants, the offline report's
+metric parity with `summarize_cluster`, and trace-vs-billing consistency
+(t0/horizon, provisioned extents == replica-hours)."""
+
+import json
+import math
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.hardware import H100_SXM
+from repro.obs import (
+    NULL_TRACER,
+    PCTS,
+    P2Quantile,
+    StreamingQuantiles,
+    Tracer,
+    WindowedAggregator,
+    analyze,
+    csv_rows,
+    make_tracer,
+    pct_key,
+    percentile_summary,
+    read_jsonl,
+    to_chrome,
+    validate_trace,
+    write_jsonl,
+    write_trace,
+)
+from repro.obs.__main__ import main as obs_main
+from repro.sim import (
+    LengthDist,
+    SchedConfig,
+    ServingCostModel,
+    Workload,
+    simulate,
+    summarize_records,
+)
+from repro.cluster import (
+    AutoscaleConfig,
+    ClusterSpec,
+    ReplicaSpec,
+    provisioning_summary,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+CFG = get_config("qwen3_14b")
+
+
+def _sig6(x):
+    return float(f"{x:.6g}")
+
+
+def _wl(**kw):
+    base = dict(
+        qps=50.0, num_requests=24, arrival="poisson",
+        prompt=LengthDist("lognormal", 96, 0.4, lo=8, hi=512),
+        output=LengthDist("lognormal", 24, 0.4, lo=2, hi=128), seed=0,
+    )
+    base.update(kw)
+    return Workload(**base)
+
+
+def _spec(pools, **kw):
+    sched = SchedConfig(slots=8)
+    return ClusterSpec(
+        replicas=tuple(ReplicaSpec(hw="h100", pool=p, sched=sched, ctx_quantum=32)
+                       for p in pools),
+        **kw)
+
+
+def _autoscaled_run(tracer=None):
+    """The golden autoscaled scenario: diurnal traffic over a rate-policy
+    fleet that scales up AND back down, so the trace covers warmup, drain,
+    scale.up/scale.down/replica.retired, and autoscale decisions."""
+    wl = _wl(qps=20.0, num_requests=120, arrival="diurnal",
+             diurnal_period=8.0, diurnal_amp=0.9)
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=4,
+                          interval=0.5, warmup=0.4, target_qps_per_replica=8.0)
+    return simulate_cluster(wl.generate(), CFG, _spec(["mixed", "mixed"]),
+                            autoscale=asc, tracer=tracer)
+
+
+# ------------------------------------------------------------- quantiles
+def test_percentile_summary_matches_numpy_and_key_convention():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(0.0, 1.0, size=500)
+    out = percentile_summary(xs, "ttft")
+    assert set(out) == {"ttft_p50", "ttft_p95", "ttft_p99", "ttft_p99.9",
+                        "ttft_mean"}
+    for p in PCTS:
+        assert out[pct_key("ttft", p)] == float(np.percentile(xs, p))
+    assert out["ttft_mean"] == pytest.approx(xs.mean())
+    assert percentile_summary([], "x")["x_p50"] == 0.0
+
+
+def test_summarize_records_routes_through_shared_convention():
+    """Satellite: one percentile convention — `summarize_records` reports
+    the shared PCTS set (incl. p99.9) with numpy-exact values."""
+    reqs = _wl().generate()
+    res = simulate(reqs, ServingCostModel(CFG, H100_SXM, ctx_quantum=32),
+                   SchedConfig(slots=8))
+    s = summarize_records(res.records)
+    ttfts = [r.ttft for r in res.records]
+    for p in PCTS:
+        assert pct_key("ttft", p) in s
+        assert s[pct_key("ttft", p)] == float(np.percentile(ttfts, p))
+
+
+def test_streaming_exact_when_tail_covers_all_ranks():
+    """n <= tail_k: every quantile is answered from the exact reservoir."""
+    rng = np.random.default_rng(1)
+    xs = rng.lognormal(0.0, 0.8, size=1000)
+    sq = StreamingQuantiles()  # tail_k=1024 >= n
+    for x in xs:
+        sq.add(x)
+    for p in PCTS:
+        assert sq.quantile(p) == pytest.approx(float(np.percentile(xs, p)),
+                                               rel=1e-12)
+    assert sq.n == 1000 and sq.min == xs.min() and sq.max == xs.max()
+
+
+def test_streaming_within_half_percent_on_lognormal():
+    """Satellite regression bound: streaming vs exact within 0.5% on a
+    lognormal stream larger than the tail reservoir (p50 runs on P²; the
+    tail percentiles stay exact because their ranks are reservoir-resident)."""
+    rng = np.random.default_rng(2)
+    xs = rng.lognormal(0.0, 1.0, size=20_000)
+    sq = StreamingQuantiles(tail_k=1024)
+    for x in xs:
+        sq.add(x)
+    for p in PCTS:
+        exact = float(np.percentile(xs, p))
+        assert abs(sq.quantile(p) - exact) / exact < 0.005, p
+    # and the SLO-gating tail is EXACT, not merely close
+    for p in (99, 99.9):
+        assert sq.quantile(p) == pytest.approx(float(np.percentile(xs, p)),
+                                               rel=1e-12)
+
+
+def test_p2_exact_for_tiny_streams():
+    q = P2Quantile(0.5)
+    for x in (5.0, 1.0, 3.0):
+        q.add(x)
+    assert q.value() == 3.0
+    with pytest.raises(ValueError):
+        P2Quantile(1.5)
+
+
+def test_windowed_aggregator():
+    agg = WindowedAggregator(1.0)
+    for t, v in [(0.1, 2.0), (0.9, 4.0), (1.5, 10.0)]:
+        agg.add(t, "queue", v)
+    rows = agg.rows()
+    assert len(rows) == 2
+    assert rows[0]["queue_n"] == 2 and rows[0]["queue_mean"] == 3.0
+    assert rows[0]["queue_min"] == 2.0 and rows[0]["queue_last"] == 4.0
+    assert rows[1]["t0"] == 1.0 and rows[1]["queue_max"] == 10.0
+    with pytest.raises(ValueError):
+        WindowedAggregator(0.0)
+
+
+# ---------------------------------------------------------------- tracer
+def test_levels_and_gating():
+    assert make_tracer("off") is NULL_TRACER
+    assert make_tracer(None) is NULL_TRACER
+    assert not NULL_TRACER.enabled and not NULL_TRACER.wants("summary")
+    tr = Tracer("replica")
+    assert tr.wants("summary") and tr.wants("replica") and not tr.wants("request")
+    with pytest.raises(ValueError):
+        Tracer("off")
+    with pytest.raises(ValueError):
+        Tracer("verbose")
+
+
+def test_validator_catches_synthetic_violations():
+    ok = [{"ev": "span", "name": "provisioned", "t0": 0.0, "t1": 2.0, "track": "r0"},
+          {"ev": "span", "name": "warmup", "t0": 0.0, "t1": 0.5, "track": "r0"},
+          {"ev": "span", "name": "queued", "t0": 0.1, "t1": 0.2, "track": "r0",
+           "rid": 1},
+          {"ev": "instant", "name": "request.complete", "t": 0.9, "track": "r0",
+           "rid": 1}]
+    assert validate_trace(ok) == []
+    # reversed span
+    bad = [{"ev": "span", "name": "prefill", "t0": 2.0, "t1": 1.0, "track": "r0",
+            "rid": 7},
+           {"ev": "instant", "name": "request.complete", "t": 2.0, "rid": 7}]
+    assert any("ends before it starts" in p for p in validate_trace(bad))
+    # structural spans that overlap without nesting
+    bad = [{"ev": "span", "name": "provisioned", "t0": 0.0, "t1": 2.0, "track": "r0"},
+           {"ev": "span", "name": "drain", "t0": 1.0, "t1": 3.0, "track": "r0"}]
+    assert any("without nesting" in p for p in validate_trace(bad))
+    # a traced rid with no terminal, and one with two
+    bad = [{"ev": "span", "name": "queued", "t0": 0.0, "t1": 1.0, "rid": 1},
+           {"ev": "instant", "name": "request.complete", "t": 1.0, "rid": 2},
+           {"ev": "instant", "name": "request.shed", "t": 2.0, "rid": 2}]
+    probs = validate_trace(bad)
+    assert any("rid 1" in p and "none" in p for p in probs)
+    assert any("rid 2" in p for p in probs)
+    # phase spans out of order
+    bad = [{"ev": "span", "name": "decode", "t0": 5.0, "t1": 6.0, "rid": 3},
+           {"ev": "span", "name": "queued", "t0": 0.0, "t1": 1.0, "rid": 3},
+           {"ev": "instant", "name": "request.complete", "t": 6.0, "rid": 3}]
+    assert any("out of order" in p for p in validate_trace(bad))
+
+
+# ----------------------------------------------- tracing is observational
+@pytest.mark.parametrize("pools", [["mixed", "mixed"], ["prefill", "decode"]])
+def test_tracing_never_perturbs_the_schedule(pools):
+    reqs = _wl().generate()
+    plain = simulate_cluster(reqs, CFG, _spec(pools))
+    traced = simulate_cluster(reqs, CFG, _spec(pools), tracer=Tracer("request"))
+    key = lambda c: [(r.rid, r.admitted, r.first_token, r.finish)
+                     for r in sorted(c.records, key=lambda r: r.rid)]
+    assert key(plain) == key(traced)
+    assert summarize_cluster(plain) == summarize_cluster(traced)
+
+
+def test_tracing_preserves_autoscaled_schedule():
+    plain = _autoscaled_run()
+    traced = _autoscaled_run(tracer=Tracer("request"))
+    assert plain.replica_spans == traced.replica_spans
+    assert [(r.rid, r.finish) for r in plain.records] == \
+           [(r.rid, r.finish) for r in traced.records]
+
+
+# -------------------------------------------------- golden trace digests
+def _digest(tr):
+    counts = Counter((e["ev"], e["name"]) for e in tr.events)
+    return {
+        "events": {f"{ev}:{name}": n for (ev, name), n in sorted(counts.items())},
+        "horizon": _sig6(tr.meta["horizon"]),
+        "span_s": _sig6(sum(e["t1"] - e["t0"] for e in tr.events
+                            if e["ev"] == "span")),
+    }
+
+
+GOLDEN_COLOCATED = {
+    "events": {"counter:busy_s": 151, "counter:kv_used": 151,
+               "counter:live": 151, "counter:queue": 151,
+               "instant:dispatch": 24, "instant:request.complete": 24,
+               "span:decode": 24, "span:prefill": 24,
+               "span:provisioned": 2, "span:queued": 24},
+    "horizon": 1.07383, "span_s": 11.1009,
+}
+GOLDEN_DISAGG = {
+    "events": {"counter:busy_s": 108, "counter:kv_used": 108,
+               "counter:live": 108, "counter:queue": 108,
+               "instant:dispatch": 24, "instant:request.complete": 24,
+               "span:decode": 24, "span:decode_wait": 24, "span:handoff": 24,
+               "span:prefill": 24, "span:provisioned": 2, "span:queued": 24},
+    "horizon": 1.09883, "span_s": 10.8456,
+}
+GOLDEN_AUTOSCALED = {
+    "events": {"counter:busy_s": 1344, "counter:kv_used": 1344,
+               "counter:live": 1344, "counter:queue": 1344,
+               "instant:autoscale.decision": 15, "instant:dispatch": 120,
+               "instant:replica.retired": 2, "instant:request.complete": 120,
+               "instant:scale.down": 2, "instant:scale.up": 2,
+               "span:decode": 120, "span:drain": 2, "span:prefill": 120,
+               "span:provisioned": 4, "span:queued": 120, "span:warmup": 2},
+    "horizon": 7.57777, "span_s": 63.8061,
+}
+
+
+@pytest.mark.parametrize("label,golden", [
+    ("colocated", GOLDEN_COLOCATED),
+    ("disaggregated", GOLDEN_DISAGG),
+    ("autoscaled", GOLDEN_AUTOSCALED),
+])
+def test_golden_trace_digest(label, golden):
+    """Schema-stability pin: the exact event mix (and 6-sig-fig timing
+    aggregates) a `repro.obs/1` trace of each canonical scenario contains.
+    A diff here means the trace schema or the simulator's event emission
+    changed — update the digest deliberately, with a CHANGES.md note."""
+    tr = Tracer("request")
+    if label == "autoscaled":
+        _autoscaled_run(tracer=tr)
+    else:
+        pools = ["mixed", "mixed"] if label == "colocated" else ["prefill", "decode"]
+        simulate_cluster(_wl().generate(), CFG, _spec(pools), tracer=tr)
+    assert validate_trace(tr.events) == []
+    assert _digest(tr) == golden
+
+
+def test_trace_levels_strictly_nest_event_sets():
+    reqs = _wl().generate()
+    sizes = {}
+    for level in ("summary", "replica", "request"):
+        tr = Tracer(level)
+        simulate_cluster(reqs, CFG, _spec(["prefill", "decode"]), tracer=tr)
+        sizes[level] = len(tr.events)
+    assert 0 <= sizes["summary"] < sizes["replica"] < sizes["request"]
+
+
+# ----------------------------------------------------------------- export
+def test_chrome_export_invariants():
+    tr = Tracer("request")
+    cres = _autoscaled_run(tracer=tr)
+    doc = to_chrome(tr.events, tr.meta)
+    doc = json.loads(json.dumps(doc))  # must be JSON-serializable
+    evs = doc["traceEvents"]
+    # async begin/end balance per (cat, id)
+    bal = Counter()
+    for e in evs:
+        if e.get("ph") == "b":
+            bal[(e["cat"], e["id"])] += 1
+        elif e.get("ph") == "e":
+            bal[(e["cat"], e["id"])] -= 1
+    assert bal and all(v == 0 for v in bal.values())
+    # one named thread per track: cluster + every provisioned replica
+    threads = {e["args"]["name"] for e in evs
+               if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert "cluster" in threads
+    assert len(threads) == 1 + len(cres.replica_specs)
+    # only structural spans become X events; counters fold track into name
+    assert {e["name"] for e in evs if e.get("ph") == "X"} <= \
+        {"provisioned", "warmup", "drain"}
+    assert all("/" in e["name"] for e in evs if e.get("ph") == "C")
+    assert doc["otherData"]["schema"] == "repro.obs/1"
+
+
+def test_jsonl_roundtrip_and_suffix_dispatch(tmp_path):
+    tr = Tracer("request")
+    simulate_cluster(_wl().generate(), CFG, _spec(["mixed"]), tracer=tr)
+    p = tmp_path / "t.jsonl"
+    assert write_trace(tr.events, p, tr.meta) == "jsonl"
+    meta, events = read_jsonl(p)
+    assert meta["schema"] == "repro.obs/1"
+    assert meta["horizon"] == tr.meta["horizon"]
+    assert events == json.loads(json.dumps(tr.events))
+    assert write_trace(tr.events, tmp_path / "t.json", tr.meta) == "chrome"
+    assert write_trace(tr.events, tmp_path / "t.csv", tr.meta) == "csv"
+
+
+def test_csv_rows_window_counters():
+    tr = Tracer("replica")
+    simulate_cluster(_wl().generate(), CFG, _spec(["mixed", "mixed"]), tracer=tr)
+    rows = csv_rows(tr.events, window=0.25)
+    assert rows and {"t0", "t1", "track", "series", "n", "mean", "min", "max",
+                     "last"} <= set(rows[0])
+    assert {r["series"] for r in rows} >= {"busy_s", "kv_used", "live", "queue"}
+    assert all(r["t1"] - r["t0"] == pytest.approx(0.25) for r in rows)
+
+
+# ----------------------------------------------------------------- report
+def test_report_reproduces_summarize_cluster_from_trace_alone(tmp_path):
+    """Acceptance: `repro.obs report` on a JSONL trace reproduces the
+    simulator's own TTFT p50/p99 with no access to the record list."""
+    tr = Tracer("request")
+    cres = _autoscaled_run(tracer=tr)
+    s = summarize_cluster(cres)
+    p = tmp_path / "t.jsonl"
+    write_jsonl(tr.events, p, tr.meta)
+    meta, events = read_jsonl(p)
+    rep = analyze(events, meta)
+    assert rep["problems"] == []
+    assert rep["summary"]["n_complete"] == len(cres.records)
+    for key in ("ttft_p50", "ttft_p99", "e2e_p50", "e2e_p99"):
+        assert rep["summary"][key] == pytest.approx(s[key], rel=1e-9), key
+    # autoscaler explanations survive the roundtrip
+    assert rep["decisions"] and all("policy" in d and "want" in d
+                                    for d in rep["decisions"])
+    assert {o["op"] for o in rep["scale_ops"]} >= {"scale.up", "scale.down",
+                                                   "replica.retired"}
+
+
+def test_report_phase_breakdown_sums_to_e2e():
+    tr = Tracer("request")
+    simulate_cluster(_wl().generate(), CFG, _spec(["prefill", "decode"]),
+                     tracer=tr)
+    rep = analyze(tr.events, tr.meta)
+    for r in rep["slowest"]:
+        total = sum(r["phases"].values())
+        assert total == pytest.approx(r["e2e"], rel=1e-6)
+
+
+def test_obs_cli_report_and_validate(tmp_path, capsys):
+    tr = Tracer("request")
+    simulate_cluster(_wl().generate(), CFG, _spec(["mixed"]), tracer=tr)
+    p = tmp_path / "t.jsonl"
+    write_jsonl(tr.events, p, tr.meta)
+    assert obs_main([ "report", str(p), "--validate-only"]) == 0
+    assert obs_main(["report", str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "latency (ms)" in out and "per-replica utilization" in out
+    # a corrupted trace (terminal removed) fails validation with exit 1
+    events = [e for e in tr.events
+              if not (e.get("name") == "request.complete" and e.get("rid") == 0)]
+    bad = tmp_path / "bad.jsonl"
+    write_jsonl(events, bad, tr.meta)
+    assert obs_main(["report", str(bad), "--validate-only"]) == 1
+
+
+# -------------------------------------------- billing / horizon consistency
+def test_trace_extents_match_billing_and_horizon():
+    """Satellite bugfix pin: summarize_cluster and provisioning_summary
+    report the same t0/horizon, the static-peak counterfactual bills over
+    that same window, and the trace's provisioned track extents sum to
+    exactly `replica_hours`."""
+    tr = Tracer("request")
+    cres = _autoscaled_run(tracer=tr)
+    s = summarize_cluster(cres)
+    prov = provisioning_summary(cres)
+    assert (s["t0"], s["horizon"]) == (prov["t0"], prov["horizon"])
+    assert cres.span == cres.horizon - cres.t0
+    assert prov["replica_hours_static_peak"] == pytest.approx(
+        cres.peak_replicas * cres.span / 3600.0)
+    prov_extent = sum(e["t1"] - e["t0"] for e in tr.events
+                      if e["ev"] == "span" and e["name"] == "provisioned")
+    assert prov_extent == pytest.approx(cres.replica_hours * 3600.0, rel=1e-12)
+    assert tr.meta["t0"] == cres.t0 and tr.meta["horizon"] == cres.horizon
+
+
+def test_prefix_cache_trace_wiring():
+    """A cached, churning fleet records cache-resident bytes and the
+    invalidation that a drain inflicts on the cache's warmth."""
+    from repro.cluster import PrefixCacheConfig
+    wl = _wl(qps=20.0, num_requests=120, arrival="diurnal",
+             diurnal_period=8.0, diurnal_amp=0.9, num_sessions=6,
+             num_prefix_groups=3, prefix=LengthDist("fixed", 48.0))
+    spec = ClusterSpec(
+        replicas=tuple(ReplicaSpec(hw="h100", pool="mixed",
+                                   sched=SchedConfig(slots=8), ctx_quantum=32)
+                       for _ in range(2)),
+        router="affinity",
+        prefix_cache=PrefixCacheConfig(budget_frac=0.001, ttl=5.0))
+    asc = AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=4,
+                          interval=0.5, warmup=0.4, target_qps_per_replica=8.0)
+    tr = Tracer("request")
+    simulate_cluster(wl.generate(), CFG, spec, autoscale=asc, tracer=tr)
+    assert validate_trace(tr.events) == []
+    assert any(e.get("name") == "cache_bytes" for e in tr.events)
+    invs = [e for e in tr.events if e.get("name") == "cache.invalidate"]
+    assert invs and all("dropped_bytes" in e["attrs"] for e in invs)
+
+
+def test_static_fleet_savings_frac_is_zero():
+    """With the shared horizon, a static fleet's actual bill equals its
+    static-peak counterfactual exactly — savings can no longer go negative
+    from the makespan-vs-horizon mismatch."""
+    cres = simulate_cluster(_wl().generate(), CFG, _spec(["mixed", "mixed"]))
+    prov = provisioning_summary(cres)
+    assert prov["replica_hours"] == pytest.approx(
+        prov["replica_hours_static_peak"])
+    assert prov["savings_frac"] == pytest.approx(0.0, abs=1e-12)
