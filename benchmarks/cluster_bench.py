@@ -130,12 +130,24 @@ def bench_cluster():
                          _cost_cache=cache)
         tr_holder.append(len(tr.events))
     t_on = _best_of(3, _traced)
+
+    # counter downsampling: the same traced run with counter_dt=1.0s —
+    # per-iteration counters collapse to at most one sample per
+    # (track, series) per second, shrinking the event log
+    def _traced_dt():
+        tr = Tracer("request", counter_dt=1.0)
+        simulate_cluster(reqs, cfg, _spec(["mixed"] * 4), tracer=tr,
+                         _cost_cache=cache)
+        tr_holder.append(len(tr.events))
+    t_dt = _best_of(3, _traced_dt)
     rows.append((
         "cluster/tracer-overhead",
         t_off * 1e6,
         f"traced_us={t_on * 1e6:.0f}"
         f";overhead={t_on / t_off - 1.0:+.1%}"
-        f";events={tr_holder[-1]}",
+        f";events={tr_holder[0]}"
+        f";counter_dt1_us={t_dt * 1e6:.0f}"
+        f";counter_dt1_events={tr_holder[-1]}",
     ))
 
     # single-replica cluster must equal repro.sim.simulate exactly

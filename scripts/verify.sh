@@ -54,6 +54,34 @@ python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 16 \
 python -m repro.obs report "$TRACE_DIR/t.jsonl" --validate-only
 python -m repro.obs report "$TRACE_DIR/t.jsonl"
 
+# live SLO monitor smokes: burn-rate alerts at sim time in both CLIs
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 24 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode colocated \
+    --slo-window 1 --slo-goodput 0.99 | grep "slo monitor:" > /dev/null
+python -m repro.sim --config qwen3_14b --hw h100 --qps 16 --requests 12 \
+    --slots 4 --sweep '' --ctx-quantum 32 --policy continuous \
+    --slo-window 5 | grep "slo monitor" > /dev/null
+
+# dashboard smoke: --html writes a non-empty page that parses as HTML
+python -m repro.obs report "$TRACE_DIR/t.jsonl" --html "$TRACE_DIR/dash.html" \
+    --slo-ttft 2.0 --slo-window 1 > /dev/null
+python - "$TRACE_DIR/dash.html" <<'PY'
+import html.parser, sys
+doc = open(sys.argv[1]).read()
+assert len(doc) > 2000 and doc.startswith("<!DOCTYPE html>"), "empty dashboard"
+p = html.parser.HTMLParser(); p.feed(doc); p.close()
+print(f"dashboard ok: {len(doc)} bytes")
+PY
+
+# trace-regression gate: regenerate the golden scenario and diff it
+# against the checked-in baseline (see tests/goldens/README.md)
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 24 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode colocated \
+    --slo-window 1 --slo-goodput 0.99 --trace "$TRACE_DIR/golden.jsonl" \
+    > /dev/null
+python -m repro.obs diff tests/goldens/cluster_small.jsonl \
+    "$TRACE_DIR/golden.jsonl" --fail-on ttft_p99=0.05,e2e_p99=0.05
+
 # docs: the generated CLI reference must match the parsers; links resolve
 python scripts/gen_cli_docs.py --check
 python scripts/check_docs.py

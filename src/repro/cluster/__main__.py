@@ -30,8 +30,16 @@ budget share as a capacity dimension of `--plan`.
 counter timelines, and explainable autoscale decisions, exported by
 suffix (.json = Chrome trace-event for Perfetto, .jsonl = event log for
 `python -m repro.obs report`, .csv = windowed time series); verbosity via
-`--trace-level`. With `--mode both` the mode is suffixed into the
+`--trace-level`, per-iteration counter downsampling via
+`--trace-counter-dt`. With `--mode both` the mode is suffixed into the
 filename (out.colocated.json, out.disaggregated.json).
+
+`--slo-window W` turns on the live SLO monitor: TTFT p99 <= `--slo-ttft`
+and (if given) goodput >= `--slo-goodput`, judged over tumbling
+W-second windows at sim time, with SRE-style fast/slow burn-rate alerts
+and EWMA anomaly detection; `alert.*`/`anomaly.*`/`slo.window` instants
+land in the trace and the summary gains time-in-violation, alerts-fired,
+and budget-burn columns.
 """
 
 from __future__ import annotations
@@ -41,7 +49,7 @@ import os
 from dataclasses import replace
 
 from repro.configs import get_config
-from repro.obs import LEVELS, make_tracer, write_trace
+from repro.obs import LEVELS, SLOMonitor, make_slos, make_tracer, write_trace
 from repro.sim import ADMISSIONS, LengthDist, SchedConfig, Workload
 from repro.cluster import (
     AUTOSCALE_POLICIES,
@@ -119,9 +127,21 @@ def build_parser() -> argparse.ArgumentParser:
                    help="trace verbosity ceiling (with --trace): summary = "
                         "scaling/shed events, replica = + per-replica spans "
                         "and counters, request = + per-request lifecycle")
+    p.add_argument("--trace-counter-dt", type=float, default=0.0,
+                   help="minimum seconds between per-(track, series) counter "
+                        "samples (0 = every iteration); trims trace size on "
+                        "long runs")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--slo-ttft", type=float, default=2.0, help="seconds")
     p.add_argument("--slo-tpot", type=float, default=0.05, help="seconds/token")
+    p.add_argument("--slo-goodput", type=float, default=None,
+                   help="live-monitor goodput objective as a fraction (e.g. "
+                        "0.99); needs --slo-window")
+    p.add_argument("--slo-window", type=float, default=None,
+                   help="enable the live SLO monitor: tumbling compliance "
+                        "window in seconds for TTFT p99 <= --slo-ttft (and "
+                        "goodput >= --slo-goodput if set), with burn-rate "
+                        "alerts and anomaly detection")
     p.add_argument("--ctx-quantum", type=int, default=16)
     # modeled prefix cache (default: legacy unconditional affinity discount)
     p.add_argument("--prefix-cache", action="store_true",
@@ -342,10 +362,19 @@ def main(argv=None) -> None:
                            retry_after=args.retry_after,
                            max_retries=args.max_retries,
                            prefix_cache=pcache)
-        tracer = make_tracer(args.trace_level if args.trace else "off")
+        tracer = make_tracer(args.trace_level if args.trace else "off",
+                             counter_dt=args.trace_counter_dt)
+        monitor = None
+        if args.slo_window is not None:
+            monitor = SLOMonitor(make_slos(
+                slo_ttft=args.slo_ttft, slo_goodput=args.slo_goodput,
+                window=args.slo_window))
+        elif args.slo_goodput is not None:
+            raise SystemExit("--slo-goodput needs --slo-window to enable "
+                             "the live SLO monitor")
         try:
             cres = simulate_cluster(reqs, cfg, spec, autoscale=autoscale,
-                                    tracer=tracer)
+                                    tracer=tracer, monitor=monitor)
         except ValueError as e:
             print(f"{mode:<14} (skipped: {e})")
             continue
@@ -383,6 +412,18 @@ def main(argv=None) -> None:
               + (f", shed={s['shed']} ({s['shed_frac']:.1%}), "
                  f"retries={s['retries']}"
                  if args.shed_depth is not None else ""))
+        if cres.slo is not None:
+            print(f"  slo monitor: time_in_violation="
+                  f"{s['time_in_violation']:g}s, "
+                  f"alerts_fired={s['alerts_fired']}, "
+                  f"budget_burn={s['budget_burn']:.1%}, "
+                  f"anomalies={s['anomalies']}")
+            for a in cres.slo["alerts"]:
+                if a["state"] in ("firing", "resolved"):
+                    print(f"    t={a['t']:7.2f}s {a['state']:<9} "
+                          f"{a['rule']} [{a['slo']}] "
+                          f"burn={a['burn_long']:.1f}/{a['burn_short']:.1f} "
+                          f"(>= {a['burn_threshold']:g})")
         if args.prefix_cache:
             print(f"  prefix cache: {s['cache_hit_rate']:.0%} hit rate, "
                   f"{s['cache_hit_tokens']} prompt tokens skipped, "

@@ -73,7 +73,7 @@ from dataclasses import dataclass, field, replace
 from repro.configs.base import ModelConfig
 from repro.core import comm as C
 from repro.core.hardware import HardwareSpec, NetLevel, get_hardware
-from repro.obs.tracer import NULL_TRACER
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.sim.costmodel import ServingCostModel
 from repro.sim.metrics import summarize_records
 from repro.sim.scheduler import ReplicaSim, ReqRecord, SchedConfig, SimResult
@@ -212,6 +212,8 @@ class ClusterResult:
     retries: int = 0
     # modeled-prefix-cache counters (None when the cache is not modeled)
     cache_stats: dict | None = None
+    # online SLO monitor result (`SLOMonitor.result()`; None unmonitored)
+    slo: dict | None = None
     # the trace's time frame: simulation origin and the instant the last
     # replica went quiet — the same end that clamps `replica_spans`, so
     # billing windows and exported trace tracks share one clock
@@ -320,11 +322,18 @@ class _ClusterEngine:
 
     def __init__(self, spec: ClusterSpec, cfg: ModelConfig,
                  autoscale: AutoscaleConfig | dict | None, cache: dict,
-                 tracer=None):
+                 tracer=None, monitor=None):
         self.spec = spec
         self.cfg = cfg
         self.cache = cache
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.monitor = monitor
+        if monitor is not None:
+            if not self.tracer.enabled:
+                # monitor without recording: a sink-only tracer feeds the
+                # monitor live and discards the event list
+                self.tracer = Tracer("request", keep_events=False)
+            self.tracer.add_sink(monitor)
         # hoisted level gates (tracing is purely observational: a traced
         # run executes the identical schedule as an untraced one)
         self._tr_sum = self.tracer.wants("summary")
@@ -669,6 +678,8 @@ class _ClusterEngine:
         rep = self.reps[i]
         pool_scaler = self.pool_scalers.get(rep.pool) or self.scaler
         for rec in done:
+            if self._tr_sum:
+                self._emit_terminal(rep, rec)
             if rep.pool in ("mixed", "prefill") and rec.first_token >= 0:
                 # end-to-end TTFT, from the ORIGINAL arrival: shed-retry
                 # backoff counts as debt (the user waited through it), so
@@ -731,6 +742,32 @@ class _ClusterEngine:
             if self._tr_req:
                 self._handoff_log.setdefault(req.rid, []).append(
                     (rec.finish, rec.finish + dt, nbytes))
+
+    def _emit_terminal(self, rep: _Rep, rec: ReqRecord) -> None:
+        """LIVE `request.complete` emission, at the moment the request's
+        last stage finishes — what lets the SLO monitor see completions at
+        sim time instead of after the run. Values are end-to-end, stitched
+        against the ORIGINAL arrival, identical to the post-run records
+        (`result()` builds the same numbers from the same fields)."""
+        rid = rec.rid
+        orig = self.orig[rid]
+        if rep.pool == "mixed":
+            ttft = rec.first_token - orig.arrival if rec.first_token >= 0 else 0.0
+            tpot = ((rec.finish - rec.first_token) / (rec.output - 1)
+                    if rec.output > 1 and rec.first_token >= 0 else 0.0)
+        elif rep.pool == "decode":
+            pre = self.prefill_recs[rid]
+            ttft = pre.first_token - orig.arrival
+            tpot = ((rec.finish - pre.first_token) / (rec.output - 1)
+                    if rec.output > 1 else 0.0)
+        else:  # prefill pool: terminal only for single-token requests
+            if orig.output > 1:
+                return  # hands off to decode; that stage emits the terminal
+            ttft = rec.first_token - orig.arrival if rec.first_token >= 0 else 0.0
+            tpot = 0.0
+        self.tracer.instant("request.complete", rec.finish, rep.sim.name,
+                            rid=rid, ttft=ttft, tpot=tpot,
+                            e2e=rec.finish - orig.arrival)
 
     def _check_drained(self) -> None:
         for i, rep in enumerate(self.reps):
@@ -865,6 +902,10 @@ class _ClusterEngine:
                  for rep in self.reps]
         if self.tracer.enabled:
             self._emit_trace(records, spans, end, mode)
+        slo = None
+        if self.monitor is not None:
+            self.monitor.finish(end)
+            slo = self.monitor.result()
         return ClusterResult(
             mode=mode, records=records,
             replica_results=[rep.sim.res for rep in self.reps],
@@ -880,12 +921,13 @@ class _ClusterEngine:
             shed=list(self.shed), retries=self.retries,
             cache_stats=(self.pcache.stats() if self.pcache is not None
                          else None),
-            t0=0.0, horizon=end)
+            slo=slo, t0=0.0, horizon=end)
 
     def _emit_trace(self, records, spans, end: float, mode: str) -> None:
         """Post-run trace emission: replica structural spans (billing
         tracks, identical to `replica_spans`) and stitched per-request
-        lifecycle spans ending in exactly one terminal instant."""
+        lifecycle spans (every rid's single terminal instant was already
+        emitted live — `_emit_terminal`/`_dispatch`)."""
         tr = self.tracer
         tr.meta.update(t0=0.0, horizon=end, mode=mode)
         if self._tr_rep:
@@ -925,15 +967,14 @@ class _ClusterEngine:
                 track = dtrack
             elif not self.disagg and rec.finish >= 0 and rec.first_token >= 0:
                 tr.span("decode", rec.first_token, rec.finish, track, rid=rid)
-            if rec.finish >= 0:
-                tr.instant("request.complete", rec.finish, track, rid=rid,
-                           ttft=rec.ttft, tpot=rec.tpot, e2e=rec.e2e)
+            # `request.complete` terminals are emitted LIVE in `_harvest`
+            # (summary level), so the online monitor sees them at sim time
 
 
 def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
                      spec: ClusterSpec, *,
                      autoscale: AutoscaleConfig | dict | None = None,
-                     tracer=None,
+                     tracer=None, monitor=None,
                      _cost_cache: dict | None = None) -> ClusterResult:
     """Co-simulate the cluster over one shared arrival stream.
 
@@ -955,6 +996,12 @@ def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
         tracer: a `repro.obs.Tracer` to record the run (None = untraced;
             tracing is purely observational and never changes the
             schedule — also regression-tested).
+        monitor: a `repro.obs.SLOMonitor` to evaluate SLO compliance,
+            burn-rate alerts, and anomaly detection ONLINE as the run
+            executes. Attached as a tracer sink (a sink-only tracer is
+            created when `tracer` is None), equally observational; the
+            result lands in `ClusterResult.slo` and alert instants in
+            the trace.
         _cost_cache: lets sweeps (the capacity planner) share memoized
             `ServingCostModel`s across many cluster candidates.
 
@@ -982,7 +1029,7 @@ def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
                     f"got {type(asc).__name__} for pool {pool!r}")
             asc.validate()
     cache = _cost_cache if _cost_cache is not None else {}
-    engine = _ClusterEngine(spec, cfg, autoscale, cache, tracer)
+    engine = _ClusterEngine(spec, cfg, autoscale, cache, tracer, monitor)
     engine.run(sorted(requests, key=lambda r: (r.arrival, r.rid)))
     return engine.result()
 
@@ -1020,6 +1067,13 @@ def summarize_cluster(cres: ClusterResult, *, slo_ttft: float | None = None,
         out["cache_resident_gb"] = cs["peak_resident_bytes"] / 1e9
         out["cache_evictions"] = cs["evictions_lru"] + cs["evictions_ttl"]
         out["cache_invalidations"] = cs["invalidations"]
+    if cres.slo is not None:
+        # online-monitor roll-up (simulated seconds / counts; see
+        # `repro.obs.monitor` for the burn-rate semantics)
+        out["time_in_violation"] = cres.slo["time_in_violation"]
+        out["alerts_fired"] = cres.slo["alerts_fired"]
+        out["budget_burn"] = cres.slo["budget_burn"]
+        out["anomalies"] = len(cres.slo["anomalies"])
     out["scale_events"] = len(cres.scale_events)
     out["peak_replicas"] = cres.peak_replicas
     out["replica_hours"] = cres.replica_hours

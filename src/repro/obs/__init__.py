@@ -1,10 +1,13 @@
 """repro.obs — observability for the serving simulators.
 
-Event tracing (`Tracer`, spans/instants/counters with trace levels),
-streaming percentiles (`StreamingQuantiles`, P² body + exact tails),
-windowed aggregation, trace exporters (Chrome trace-event JSON for
-Perfetto, JSONL event log, windowed CSV), and an offline report analyzer
-(`python -m repro.obs report trace.jsonl`).
+Event tracing (`Tracer`, spans/instants/counters with trace levels and a
+sink API for online subscribers), streaming percentiles
+(`StreamingQuantiles`, P² body + exact tails), windowed aggregation,
+trace exporters (Chrome trace-event JSON for Perfetto, JSONL event log,
+windowed CSV), a live SLO monitor (`SLOMonitor`: burn-rate alerts +
+anomaly detection at sim time), an offline report analyzer
+(`python -m repro.obs report trace.jsonl`, `--html` dashboard), and a
+trace-to-trace diff / CI gate (`python -m repro.obs diff a b`).
 
 See docs/observability.md for the event schema and workflow.
 """
@@ -16,6 +19,11 @@ from .tracer import (LEVELS, NULL_TRACER, STRUCTURAL_SPANS, TERMINALS,
 from .export import (csv_rows, read_jsonl, to_chrome, write_chrome,
                      write_csv, write_jsonl, write_trace)
 from .report import analyze, render, report_file
+from .monitor import (SLO, AnomalyConfig, BurnRateRule, SLOMonitor,
+                      default_rules, make_slos, replay)
+from .diff import (DEFAULT_THRESHOLDS, diff_traces, parse_fail_on,
+                   regressions, render_diff)
+from .dashboard import render_html
 
 __all__ = [
     "PCTS", "P2Quantile", "StreamingQuantiles", "WindowedAggregator",
@@ -25,4 +33,9 @@ __all__ = [
     "csv_rows", "read_jsonl", "to_chrome", "write_chrome", "write_csv",
     "write_jsonl", "write_trace",
     "analyze", "render", "report_file",
+    "SLO", "AnomalyConfig", "BurnRateRule", "SLOMonitor", "default_rules",
+    "make_slos", "replay",
+    "DEFAULT_THRESHOLDS", "diff_traces", "parse_fail_on", "regressions",
+    "render_diff",
+    "render_html",
 ]

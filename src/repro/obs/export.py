@@ -18,7 +18,8 @@ Three renderings of the same `Tracer.events` stream:
   * `write_csv` — counter timelines windowed through
     `WindowedAggregator` into long-format rows
     (`t0,t1,track,series,n,mean,min,max,last`), ready for pandas or a
-    spreadsheet.
+    spreadsheet; empty windows between data emit explicit `n=0` gap rows
+    so the time axis is contiguous.
 
 `write_trace` picks the format from the path suffix: `.jsonl` → JSONL,
 `.csv` → CSV, anything else → Chrome JSON.
@@ -146,7 +147,19 @@ def csv_rows(events, window: float = 1.0) -> list[dict]:
         agg.add(ev["t"], ev["name"], ev["value"])
     rows: list[dict] = []
     for track, agg in aggs.items():
-        for wrow in agg.rows():
+        wrows = agg.rows(fill_gaps=True)
+        # a gap row (empty window) still emits one n=0 row per series the
+        # track carries, so the exported time axis is contiguous
+        all_series = sorted({k.rsplit("_", 1)[0] for wrow in wrows
+                             for k in wrow if k not in ("t0", "t1", "gap")})
+        for wrow in wrows:
+            if wrow.get("gap"):
+                for s in all_series:
+                    rows.append({"t0": wrow["t0"], "t1": wrow["t1"],
+                                 "track": track or "cluster", "series": s,
+                                 "n": 0, "mean": "", "min": "", "max": "",
+                                 "last": ""})
+                continue
             series = sorted({k.rsplit("_", 1)[0] for k in wrow
                              if k not in ("t0", "t1")})
             for s in series:

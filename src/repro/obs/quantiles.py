@@ -201,7 +201,15 @@ class WindowedAggregator:
     (sorted by time) with `t0`/`t1` bounds and, per series seen in it,
     `{name}_n/_mean/_min/_max/_last`. This is the rolling aggregate the
     CSV time-series exporter renders, and the bounded-memory substitute
-    for keeping raw counter timelines at fleet scale."""
+    for keeping raw counter timelines at fleet scale.
+
+    Out-of-order timestamps are safe: observations land in the window
+    their own `t` selects (buckets are dict-keyed, never "current"), and
+    `_last` tracks the latest-`t` observation rather than the latest
+    `add()` call. `rows(fill_gaps=True)` additionally emits a bare
+    `{"t0", "t1", "gap": True}` row for every empty window between the
+    first and last non-empty one, so downstream time axes (CSV export,
+    the dashboard) stay contiguous."""
 
     def __init__(self, dt: float):
         if dt <= 0:
@@ -224,7 +232,7 @@ class WindowedAggregator:
         if t >= cell[4]:
             cell[4], cell[5] = t, v
 
-    def rows(self) -> list[dict]:
+    def rows(self, *, fill_gaps: bool = False) -> list[dict]:
         wins: dict[int, dict] = {}
         for (w, name), (n, s, lo, hi, _, last) in sorted(self._w.items()):
             row = wins.setdefault(w, {"t0": w * self.dt, "t1": (w + 1) * self.dt})
@@ -233,4 +241,26 @@ class WindowedAggregator:
             row[f"{name}_min"] = lo
             row[f"{name}_max"] = hi
             row[f"{name}_last"] = last
+        if not wins:
+            return []
+        if fill_gaps:
+            lo, hi = min(wins), max(wins)
+            return [wins.get(w, {"t0": w * self.dt, "t1": (w + 1) * self.dt,
+                                 "gap": True})
+                    for w in range(lo, hi + 1)]
         return [wins[w] for w in sorted(wins)]
+
+    def range_stats(self, name: str, t0: float, t1: float) -> dict:
+        """Count and sum of series `name` over the buckets overlapping
+        `[t0, t1)`. Bucket-granular: partial buckets at the edges are
+        counted whole, so callers that align `t0`/`t1` to multiples of
+        `dt` (the SLO monitor's burn-rate windows) get exact totals."""
+        k0 = int(math.floor(t0 / self.dt))
+        k1 = int(math.ceil(t1 / self.dt))
+        n, s = 0, 0.0
+        for k in range(k0, k1):
+            cell = self._w.get((k, name))
+            if cell is not None:
+                n += cell[0]
+                s += cell[1]
+        return {"n": n, "sum": s}

@@ -21,7 +21,7 @@ analysis. Three sections:
 from __future__ import annotations
 
 from .export import read_jsonl
-from .quantiles import StreamingQuantiles
+from .quantiles import StreamingQuantiles, percentile_summary
 from .tracer import TERMINALS, validate_trace
 
 PHASES = ("queued", "prefill", "handoff", "decode_wait", "decode")
@@ -41,6 +41,9 @@ def analyze(events, meta=None, *, topk: int = 10) -> dict:
     decisions: list[dict] = []
     scale_ops: list[dict] = []
     counts: dict[str, int] = {}
+    slo_windows: list[dict] = []
+    alerts: list[dict] = []
+    anomalies: list[dict] = []
 
     for ev in events:
         kind = ev.get("ev")
@@ -67,14 +70,7 @@ def analyze(events, meta=None, *, topk: int = 10) -> dict:
                 row = {"rid": rid, "t": ev["t"], "outcome": name.split(".")[1],
                        "track": ev.get("track", ""),
                        "ttft": at.get("ttft"), "tpot": at.get("tpot"),
-                       "e2e": at.get("e2e"),
-                       "phases": phase_by_rid.get(rid, {})}
-                if row["e2e"] is None and rid in span_bounds:
-                    row["e2e"] = span_bounds[rid][1] - span_bounds[rid][0]
-                if row["ttft"] is None and rid in phase_by_rid:
-                    ph = phase_by_rid[rid]
-                    if "prefill" in ph:
-                        row["ttft"] = ph.get("queued", 0.0) + ph["prefill"]
+                       "e2e": at.get("e2e")}
                 requests.append(row)
                 if name == "request.complete":
                     tr = ev.get("track", "")
@@ -86,10 +82,31 @@ def analyze(events, meta=None, *, topk: int = 10) -> dict:
                 scale_ops.append({"t": ev["t"], "op": name,
                                   "track": ev.get("track", ""),
                                   **dict(ev.get("attrs", ()))})
+            elif name == "slo.window":
+                slo_windows.append({"t": ev["t"], **dict(ev.get("attrs", ()))})
+            elif name.startswith("alert."):
+                alerts.append({"t": ev["t"], "state": name.split(".", 1)[1],
+                               **dict(ev.get("attrs", ()))})
+            elif name.startswith("anomaly."):
+                anomalies.append({"t": ev["t"], "series": name.split(".", 1)[1],
+                                  "track": ev.get("track", ""),
+                                  **dict(ev.get("attrs", ()))})
         elif kind == "counter" and name == "busy_s":
             # cumulative counter: the last sample is the total
             tr = ev.get("track", "")
             busy[tr] = max(busy.get(tr, 0.0), ev["value"])
+
+    # phase spans may arrive before OR after a rid's terminal (live
+    # terminals precede the post-run span emission), so resolve phases
+    # only after the full pass
+    for row in requests:
+        rid = row["rid"]
+        row["phases"] = phase_by_rid.get(rid, {})
+        if row["e2e"] is None and rid in span_bounds:
+            row["e2e"] = span_bounds[rid][1] - span_bounds[rid][0]
+        if row["ttft"] is None and "prefill" in row["phases"]:
+            row["ttft"] = (row["phases"].get("queued", 0.0)
+                           + row["phases"]["prefill"])
 
     summary: dict = {"n_requests": len(requests)}
     for key in ("ttft", "tpot", "e2e"):
@@ -102,8 +119,16 @@ def analyze(events, meta=None, *, topk: int = 10) -> dict:
     for term in TERMINALS:
         summary[term.replace("request.", "n_")] = counts.get(term, 0)
 
+    phase_stats: dict[str, dict] = {}
+    for ph in PHASES:
+        vals = [d[ph] for d in phase_by_rid.values() if ph in d]
+        if vals:
+            phase_stats[ph] = percentile_summary(vals, ph)
+            phase_stats[ph][f"{ph}_n"] = len(vals)
+
     done = [r for r in requests if r["outcome"] == "complete" and r["e2e"] is not None]
-    slowest = sorted(done, key=lambda r: -r["e2e"])[:topk]
+    # e2e ties break by rid so --topk output is stable across runs/platforms
+    slowest = sorted(done, key=lambda r: (-r["e2e"], r["rid"]))[:topk]
 
     tracks = sorted(set(provisioned) | set(busy) | set(completed_per_track))
     util = []
@@ -115,8 +140,10 @@ def analyze(events, meta=None, *, topk: int = 10) -> dict:
                      "completed": completed_per_track.get(tr, 0)})
 
     return {"meta": meta, "summary": summary, "slowest": slowest,
-            "replicas": util, "decisions": decisions, "scale_ops": scale_ops,
-            "problems": validate_trace(events)}
+            "phase_stats": phase_stats, "replicas": util,
+            "decisions": decisions, "scale_ops": scale_ops,
+            "slo_windows": slo_windows, "alerts": alerts,
+            "anomalies": anomalies, "problems": validate_trace(events)}
 
 
 def _fmt_ms(x) -> str:
@@ -176,6 +203,35 @@ def render(rep: dict) -> str:
                 out.append(f"  t={e['t']:>8.2f}s  decision   "
                            f"pool={e.get('pool', '-')} "
                            f"policy={e.get('policy', '?')}  {inputs}")
+    if rep.get("slo_windows"):
+        out.append("")
+        out.append("SLO compliance (tumbling windows):")
+        by_slo: dict[str, list[dict]] = {}
+        for w in rep["slo_windows"]:
+            by_slo.setdefault(w.get("slo", "?"), []).append(w)
+        for slo, wins in by_slo.items():
+            judged = [w for w in wins if w.get("ok") is not None]
+            viol = [w for w in judged if w.get("ok") is False]
+            tail = wins[-1]
+            out.append(
+                f"  {slo:<24} windows={len(judged)} violated={len(viol)}  "
+                f"budget_remaining={tail.get('budget_remaining', 0.0):.1%}")
+    if rep.get("alerts"):
+        out.append("")
+        out.append("alert timeline:")
+        for a in rep["alerts"]:
+            out.append(
+                f"  t={a['t']:>8.2f}s  {a['state']:<9} {a.get('rule', '?'):<10}"
+                f" slo={a.get('slo', '?')}  burn={a.get('burn_long', 0.0):.1f}"
+                f"/{a.get('burn_short', 0.0):.1f}"
+                f" (>= {a.get('burn_threshold', 0.0):g})")
+    if rep.get("anomalies"):
+        out.append("")
+        out.append(f"anomalies ({len(rep['anomalies'])}):")
+        for a in rep["anomalies"][:20]:
+            out.append(f"  t={a['t']:>8.2f}s  {a['series']:<10} "
+                       f"{a.get('track', '')}  value={a.get('value', 0.0):.3g} "
+                       f"z={a.get('z', 0.0):+.1f}")
     if rep["problems"]:
         out.append("")
         out.append(f"TRACE PROBLEMS ({len(rep['problems'])}):")

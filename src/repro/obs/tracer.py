@@ -17,6 +17,19 @@ Everything is observational: a traced run and an untraced run execute the
 identical schedule (tested by `tests/test_obs.py`), so tracing can never
 perturb the pinned-autoscaler bit-parity contract.
 
+A `Tracer` can also stream its events to **sinks** (`add_sink`): objects
+with an `on_event(ev)` method that consume each event the moment it is
+emitted, at sim time — the substrate the online SLO monitor
+(`repro.obs.monitor`) is built on, with no second pass over the event
+list. A sink may emit events of its own back into the tracer (alert
+instants, window evaluations); those are appended to the stream but not
+re-dispatched to sinks, so sink cascades cannot recurse. Construct with
+`keep_events=False` to run sinks without retaining the event list (live
+monitoring without recording), and `counter_dt=x` to downsample counter
+timelines to at most one sample per `x` simulated seconds per
+(track, series) — the knob that keeps replica-level traces of long
+diurnal runs bounded.
+
 Trace levels are ordered `off < summary < replica < request`; call sites
 gate on `tracer.wants(level)` (usually hoisted into a local boolean) so
 the disabled path costs one attribute read. The module-level `NULL_TRACER`
@@ -76,15 +89,23 @@ class Tracer:
     """In-memory event collector for one simulation run.
 
     `level` sets the verbosity ceiling: `summary` keeps cluster-scope
-    events (scale/autoscale decisions, shed/retry instants), `replica`
-    adds per-replica structural spans and counter timelines, `request`
-    adds per-request lifecycle spans and dispatch explanations. Emit
-    methods do not re-check the level — call sites gate with `wants()`,
-    which keeps the hot path a single hoisted boolean."""
+    events (scale/autoscale decisions, terminal/shed/retry instants),
+    `replica` adds per-replica structural spans and counter timelines,
+    `request` adds per-request lifecycle spans and dispatch explanations.
+    Emit methods do not re-check the level — call sites gate with
+    `wants()`, which keeps the hot path a single hoisted boolean.
+
+    `sinks` (or `add_sink`) registers online consumers — objects with
+    `on_event(ev)` — that see each event as it is emitted. Events a sink
+    emits back through the tracer are recorded but not re-dispatched.
+    `keep_events=False` drops the in-memory event list (sink-only mode);
+    `counter_dt > 0` keeps at most one counter sample per (track, name)
+    per `counter_dt` simulated seconds."""
 
     enabled = True
 
-    def __init__(self, level: str = "request"):
+    def __init__(self, level: str = "request", *, sinks=(), keep_events: bool = True,
+                 counter_dt: float = 0.0):
         if level not in LEVELS:
             raise ValueError(f"unknown trace level {level!r}; expected one of {LEVELS}")
         if level == "off":
@@ -93,6 +114,35 @@ class Tracer:
         self._rank = LEVELS.index(level)
         self.events: list[dict] = []
         self.meta: dict = {"schema": "repro.obs/1"}
+        self.keep_events = bool(keep_events)
+        self.counter_dt = float(counter_dt)
+        self._last_counter: dict[tuple[str, str], float] = {}
+        self._sinks: list = []
+        self._dispatching = False
+        for s in sinks:
+            self.add_sink(s)
+
+    def add_sink(self, sink) -> None:
+        """Register an online event consumer. If the sink has a `bind`
+        method it is called with this tracer so the sink can emit events
+        of its own (e.g. the SLO monitor's `alert.*` instants)."""
+        self._sinks.append(sink)
+        bind = getattr(sink, "bind", None)
+        if bind is not None:
+            bind(self)
+
+    def _emit(self, ev: dict) -> None:
+        if self.keep_events:
+            self.events.append(ev)
+        if self._sinks and not self._dispatching:
+            # events emitted *by* a sink (alert instants) are recorded
+            # above but never fed back into sinks — no recursion
+            self._dispatching = True
+            try:
+                for s in self._sinks:
+                    s.on_event(ev)
+            finally:
+                self._dispatching = False
 
     def wants(self, level: str) -> bool:
         """True when events at `level` should be emitted under this
@@ -106,7 +156,7 @@ class Tracer:
             ev["rid"] = rid
         if attrs:
             ev["attrs"] = attrs
-        self.events.append(ev)
+        self._emit(ev)
 
     def instant(self, name, t, track="", rid=None, **attrs) -> None:
         ev = {"ev": "instant", "name": name, "t": float(t), "track": track}
@@ -114,19 +164,25 @@ class Tracer:
             ev["rid"] = rid
         if attrs:
             ev["attrs"] = attrs
-        self.events.append(ev)
+        self._emit(ev)
 
     def counter(self, name, t, value, track="") -> None:
-        self.events.append({"ev": "counter", "name": name, "t": float(t),
-                            "value": float(value), "track": track})
+        if self.counter_dt > 0.0:
+            key = (track, name)
+            last = self._last_counter.get(key)
+            if last is not None and t - last < self.counter_dt:
+                return
+            self._last_counter[key] = t
+        self._emit({"ev": "counter", "name": name, "t": float(t),
+                    "value": float(value), "track": track})
 
 
-def make_tracer(level: str | None):
+def make_tracer(level: str | None, *, counter_dt: float = 0.0):
     """Level string (or None/'off') -> tracer instance. The CLI-facing
     constructor: `make_tracer('off') is NULL_TRACER`."""
     if level is None or level == "off":
         return NULL_TRACER
-    return Tracer(level)
+    return Tracer(level, counter_dt=counter_dt)
 
 
 def validate_trace(events) -> list[str]:

@@ -6,7 +6,15 @@ Prints TTFT/TPOT/e2e percentiles, goodput, and tokens/s per scheduler
 policy, then the static-vs-continuous throughput-latency sweep.
 `--trace out.json` records one policy's run (request lifecycle spans +
 per-iteration counters) for Perfetto (.json), `repro.obs report`
-(.jsonl), or spreadsheets (.csv).
+(.jsonl), or spreadsheets (.csv); `--trace-counter-dt` downsamples the
+per-iteration counters.
+
+`--slo-window W` evaluates the SLO monitor over each policy's run
+(TTFT p99 <= --slo-ttft, goodput >= --slo-goodput if set, tumbling
+W-second windows, burn-rate alerts). The single-replica sim emits
+request records after the run, so the monitor replays the recorded
+events in time order — same engine, same results as the cluster CLI's
+live monitor.
 """
 
 from __future__ import annotations
@@ -16,7 +24,7 @@ import os
 
 from repro.configs import get_config
 from repro.core.hardware import get_hardware
-from repro.obs import LEVELS, make_tracer, write_trace
+from repro.obs import LEVELS, make_slos, make_tracer, replay, write_trace
 from repro.sim import (
     ADMISSIONS,
     LengthDist,
@@ -64,6 +72,9 @@ def build_parser() -> argparse.ArgumentParser:
                         "the filename")
     p.add_argument("--trace-level", default="request", choices=list(LEVELS),
                    help="trace verbosity ceiling (with --trace)")
+    p.add_argument("--trace-counter-dt", type=float, default=0.0,
+                   help="minimum seconds between per-(track, series) counter "
+                        "samples (0 = every iteration)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--policy", default="all", choices=list(POLICIES) + ["all"])
     p.add_argument("--slots", type=int, default=16)
@@ -76,6 +87,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="override KV budget (GB); default: DRAM minus weights")
     p.add_argument("--slo-ttft", type=float, default=2.0, help="seconds")
     p.add_argument("--slo-tpot", type=float, default=0.05, help="seconds/token")
+    p.add_argument("--slo-goodput", type=float, default=None,
+                   help="SLO-monitor goodput objective as a fraction (e.g. "
+                        "0.99); needs --slo-window")
+    p.add_argument("--slo-window", type=float, default=None,
+                   help="evaluate the SLO monitor over the run: tumbling "
+                        "compliance window in seconds for TTFT p99 <= "
+                        "--slo-ttft (and goodput >= --slo-goodput if set)")
     p.add_argument("--sweep", default="2,4,8,16",
                    help="comma-separated slot counts for the pareto sweep ('' to skip)")
     p.add_argument("--ctx-quantum", type=int, default=16)
@@ -121,13 +139,30 @@ def main(argv=None) -> None:
            f"{'e2e p50/p95/p99 (s)':>21} {'tok/s':>7} {'goodput':>8} {'preempt':>7}")
     print(hdr)
     print("-" * len(hdr))
+    slos = make_slos(slo_ttft=args.slo_ttft, slo_goodput=args.slo_goodput,
+                     window=args.slo_window or 30.0) \
+        if args.slo_window is not None else ()
+    if args.slo_goodput is not None and args.slo_window is None:
+        raise SystemExit("--slo-goodput needs --slo-window to enable the "
+                         "SLO monitor")
     for policy in policies:
         sc = SchedConfig(policy=policy, slots=args.slots,
                          token_budget=args.token_budget, kv_capacity=kv_cap,
                          admission=args.admission, slo_ttft=args.slo_ttft)
-        tracer = make_tracer(args.trace_level if args.trace else "off")
+        # the monitor consumes request-level events, so monitoring forces
+        # the tracer to request level (even without --trace)
+        level = args.trace_level if args.trace else "off"
+        if slos and level != "request":
+            level = "request"
+        tracer = make_tracer(level, counter_dt=args.trace_counter_dt)
         s = summarize(simulate(reqs, cost, sc, tracer=tracer),
                       slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
+        if slos:
+            mres = replay(tracer.meta, tracer.events, slos)
+            print(f"# slo monitor [{policy}]: "
+                  f"time_in_violation={mres['time_in_violation']:g}s, "
+                  f"alerts_fired={mres['alerts_fired']}, "
+                  f"budget_burn={mres['budget_burn']:.1%}")
         if tracer.enabled:
             path = args.trace
             if len(policies) > 1:

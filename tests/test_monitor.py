@@ -1,0 +1,365 @@
+"""repro.obs.monitor / diff / dashboard: live SLO monitoring is
+observational (monitored runs reproduce unmonitored schedules exactly and
+add only slo.*/alert.*/anomaly.* instants to the trace), the online
+monitor agrees with its offline replay bit-for-bit, burn-rate alerts fire
+fast-burn before slow-burn on an overload burst, `summarize_cluster`
+gains the SLO columns, the trace diff passes on seed-only changes and
+fails (non-zero CLI exit) on a degraded run, and the HTML dashboard is a
+parseable self-contained page."""
+
+import html.parser
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.obs import (
+    SLO,
+    SLOMonitor,
+    Tracer,
+    diff_traces,
+    make_slos,
+    read_jsonl,
+    regressions,
+    render_html,
+    replay,
+    write_jsonl,
+)
+from repro.obs.__main__ import main as obs_main
+from repro.sim import LengthDist, SchedConfig, Workload
+from repro.cluster import (
+    AutoscaleConfig,
+    ClusterSpec,
+    ReplicaSpec,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+CFG = get_config("qwen3_14b")
+
+
+def _wl(**kw):
+    base = dict(
+        qps=50.0, num_requests=24, arrival="poisson",
+        prompt=LengthDist("lognormal", 96, 0.4, lo=8, hi=512),
+        output=LengthDist("lognormal", 24, 0.4, lo=2, hi=128), seed=0,
+    )
+    base.update(kw)
+    return Workload(**base)
+
+
+def _spec(pools, **kw):
+    sched = SchedConfig(slots=8)
+    return ClusterSpec(
+        replicas=tuple(ReplicaSpec(hw="h100", pool=p, sched=sched,
+                                   ctx_quantum=32) for p in pools),
+        **kw)
+
+
+def _autoscale():
+    return AutoscaleConfig(policy="rate", min_replicas=1, max_replicas=4,
+                           interval=0.5, warmup=0.4,
+                           target_qps_per_replica=8.0)
+
+
+def _diurnal_reqs(seed=0):
+    return _wl(qps=20.0, num_requests=120, arrival="diurnal",
+               diurnal_period=8.0, diurnal_amp=0.9, seed=seed).generate()
+
+
+def _monitor(window=0.5):
+    return SLOMonitor(make_slos(slo_ttft=0.5, slo_goodput=0.99,
+                                window=window))
+
+
+SCENARIOS = {
+    "colocated": dict(pools=["mixed", "mixed"], autoscale=None),
+    "disaggregated": dict(pools=["prefill", "decode"], autoscale=None),
+    "autoscaled": dict(pools=["mixed", "mixed"], autoscale=_autoscale()),
+}
+
+
+def _run(label, *, tracer=None, monitor=None):
+    sc = SCENARIOS[label]
+    reqs = _diurnal_reqs() if sc["autoscale"] else _wl().generate()
+    return simulate_cluster(reqs, CFG, _spec(sc["pools"]),
+                            autoscale=sc["autoscale"], tracer=tracer,
+                            monitor=monitor)
+
+
+# ----------------------------------------------------- observational SLO
+@pytest.mark.parametrize("label", list(SCENARIOS))
+def test_monitoring_never_perturbs_the_schedule(label):
+    """Acceptance: attaching the monitor (which force-creates an internal
+    sink-only tracer when none was given) changes no request timing."""
+    plain = _run(label)
+    mon = _run(label, monitor=_monitor())
+    key = lambda c: [(r.rid, r.admitted, r.first_token, r.finish)
+                     for r in sorted(c.records, key=lambda r: r.rid)]
+    assert key(plain) == key(mon)
+    assert plain.replica_spans == mon.replica_spans
+    assert mon.slo is not None and plain.slo is None
+
+
+@pytest.mark.parametrize("label", list(SCENARIOS))
+def test_monitored_trace_adds_only_monitor_instants(label):
+    """Acceptance: the golden event mix gains only slo.window / alert.* /
+    anomaly.* instants — every pre-existing (kind, name) count is
+    untouched."""
+    from collections import Counter
+    plain_tr, mon_tr = Tracer("request"), Tracer("request")
+    _run(label, tracer=plain_tr)
+    _run(label, tracer=mon_tr, monitor=_monitor())
+    mix = lambda tr: Counter((e["ev"], e["name"]) for e in tr.events)
+    a, b = mix(plain_tr), mix(mon_tr)
+    assert {k: v for k, v in b.items() if k in a} == dict(a)
+    extra = {name for (ev, name) in set(b) - set(a)}
+    assert extra and all(
+        n == "slo.window" or n.startswith(("alert.", "anomaly."))
+        for n in extra), extra
+
+
+# -------------------------------------------------- online == offline
+def test_online_monitor_equals_offline_replay_exactly():
+    tr = Tracer("request")
+    slos = make_slos(slo_ttft=0.5, slo_goodput=0.99, window=2.0)
+    mon = SLOMonitor(slos)
+    cres = _run("autoscaled", tracer=tr, monitor=mon)
+    offline = replay(tr.meta, tr.events, slos)
+    assert cres.slo == offline
+
+
+def test_windowed_ttft_p99_matches_offline_recompute():
+    """The monitor's per-window TTFT p99 equals a numpy recompute over the
+    same window's terminal events (exact: window n <= the tail
+    reservoir)."""
+    tr = Tracer("request")
+    mon = SLOMonitor(make_slos(slo_ttft=0.5, window=2.0))
+    _run("autoscaled", tracer=tr, monitor=mon)
+    samples: dict[int, list[float]] = {}
+    for ev in tr.events:
+        if ev.get("ev") == "instant" and ev["name"] == "request.complete":
+            samples.setdefault(int(ev["t"] // 2.0), []).append(
+                ev["attrs"]["ttft"])
+    rows = mon.result()["slos"][0]["windows"]
+    judged = [w for w in rows if w["ok"] is not None]
+    assert judged
+    for w in judged:
+        k = int(w["t0"] // 2.0)
+        assert w["n"] == len(samples[k])
+        assert w["value"] == pytest.approx(
+            float(np.percentile(samples[k], 99)), rel=1e-9)
+
+
+def test_goodput_counts_latency_misses_and_sheds_as_bad():
+    """Goodput's definition: completed AND within every latency SLO. A
+    completed-but-slow request and a shed both burn goodput budget."""
+    tr = Tracer("summary")
+    mon = SLOMonitor(make_slos(slo_ttft=0.5, slo_goodput=0.99, window=10.0))
+    tr.add_sink(mon)
+    for i in range(8):
+        tr.instant("request.complete", float(i), rid=i, ttft=0.1, tpot=0.01,
+                   e2e=0.2)
+    tr.instant("request.complete", 8.0, rid=8, ttft=3.0, tpot=0.01, e2e=3.2)
+    tr.instant("request.shed", 9.0, rid=9)
+    mon.finish(10.0)
+    res = mon.result()
+    gp = [s for s in res["slos"] if s["name"].startswith("goodput")][0]
+    lat = [s for s in res["slos"] if s["name"].startswith("ttft")][0]
+    assert gp["n"] == 10 and gp["bad"] == 2  # slow + shed
+    assert lat["n"] == 9 and lat["bad"] == 1  # the shed has no latency
+
+
+# ------------------------------------------------------ burn-rate alerts
+def _burst_monitor(window=4.0):
+    """20s healthy TTFT then 20s grossly violating: the canonical
+    fast-burn-then-slow-burn overload."""
+    tr = Tracer("summary")
+    mon = SLOMonitor(make_slos(slo_ttft=0.5, window=window))
+    tr.add_sink(mon)
+    t, i = 0.0, 0
+    while t < 40.0:
+        ttft = 0.1 if t < 20.0 else 2.0
+        tr.instant("request.complete", t, rid=i, ttft=ttft, tpot=0.01,
+                   e2e=ttft + 0.5)
+        t += 1.0 / 3.0
+        i += 1
+    mon.finish(40.0)
+    return tr, mon
+
+
+def test_fast_burn_fires_before_slow_burn():
+    _, mon = _burst_monitor()
+    res = mon.result()
+    firing = {a["rule"]: a["t"] for a in res["alerts"]
+              if a["state"] == "firing"}
+    assert {"fast_burn", "slow_burn"} <= set(firing)
+    assert firing["fast_burn"] < firing["slow_burn"]
+    assert res["alerts_fired"] == 2
+    # every firing transition crossed both burn windows' thresholds
+    for a in res["alerts"]:
+        if a["state"] == "firing":
+            assert a["burn_long"] >= a["burn_threshold"]
+            assert a["burn_short"] >= a["burn_threshold"]
+
+
+def test_time_in_violation_is_union_of_violated_windows():
+    _, mon = _burst_monitor()
+    res = mon.result()
+    viol = [(w["t0"], w["t1"]) for s in res["slos"] for w in s["windows"]
+            if w["ok"] is False]
+    assert viol
+    assert res["time_in_violation"] == pytest.approx(
+        sum(t1 - t0 for t0, t1 in viol))  # windows of one SLO never overlap
+    assert res["time_in_violation"] == pytest.approx(20.0)
+
+
+def test_alert_resolves_when_the_burst_ends():
+    tr = Tracer("summary")
+    mon = SLOMonitor(make_slos(slo_ttft=0.5, window=4.0))
+    tr.add_sink(mon)
+    t, i = 0.0, 0
+    while t < 60.0:
+        ttft = 2.0 if 10.0 <= t < 20.0 else 0.1
+        tr.instant("request.complete", t, rid=i, ttft=ttft, tpot=0.01,
+                   e2e=ttft + 0.5)
+        t += 1.0 / 3.0
+        i += 1
+    mon.finish(60.0)
+    states = [a["state"] for a in mon.result()["alerts"]
+              if a["rule"] == "fast_burn"]
+    assert states == ["pending", "firing", "resolved"]
+
+
+def test_slo_spec_validation_and_names():
+    assert SLO("ttft", 0.5).name == "ttft_p99<=0.5s"
+    assert SLO("goodput", 0.99).name == "goodput>=0.99"
+    with pytest.raises(ValueError):
+        SLO("goodput", 1.5)
+    with pytest.raises(ValueError):
+        SLO("ttft", 0.5, window=0.0)
+    assert make_slos() == ()
+    assert len(make_slos(slo_ttft=1.0, slo_goodput=0.99)) == 2
+
+
+def test_finish_is_idempotent():
+    _, mon = _burst_monitor()
+    first = mon.result()
+    mon.finish(40.0)
+    assert mon.result() == first
+
+
+# ------------------------------------------------------- summary columns
+def test_summarize_cluster_gains_slo_columns():
+    cres = _run("autoscaled", monitor=_monitor(window=2.0))
+    s = summarize_cluster(cres)
+    for col in ("time_in_violation", "alerts_fired", "budget_burn",
+                "anomalies"):
+        assert col in s, col
+    assert s["time_in_violation"] >= 0.0
+    plain = summarize_cluster(_run("autoscaled"))
+    assert "time_in_violation" not in plain
+
+
+def test_anomaly_detector_flags_the_burst_onset():
+    """A replica queue that sits flat then spikes produces an
+    anomaly.queue instant at the spike, not during the flat phase."""
+    tr = Tracer("replica")
+    mon = SLOMonitor(make_slos(slo_ttft=10.0, window=10.0))
+    tr.add_sink(mon)
+    for i in range(60):
+        tr.counter("queue", 0.5 * i, 4.0 + (i % 2), "r0")
+    tr.counter("queue", 30.5, 400.0, "r0")
+    mon.finish(31.0)
+    an = mon.result()["anomalies"]
+    assert [a for a in an if a["t"] == 30.5 and a["series"] == "queue"]
+    assert not [a for a in an if a["t"] < 30.0]
+
+
+# ------------------------------------------------------------------ diff
+def _traced_jsonl(tmp_path, name, *, seed=0, max_replicas=4):
+    tr = Tracer("request")
+    asc = AutoscaleConfig(policy="rate", min_replicas=1,
+                          max_replicas=max_replicas, interval=0.5,
+                          warmup=0.4, target_qps_per_replica=8.0)
+    simulate_cluster(_diurnal_reqs(seed=seed), CFG, _spec(["mixed", "mixed"]),
+                     autoscale=asc, tracer=tr,
+                     monitor=SLOMonitor(make_slos(slo_ttft=0.5,
+                                                  window=2.0)))
+    p = tmp_path / name
+    write_jsonl(tr.events, p, tr.meta)
+    return p
+
+
+def test_diff_passes_on_seed_only_change(tmp_path):
+    """Acceptance: two runs differing only in workload seed stay within
+    the default tolerances."""
+    a = _traced_jsonl(tmp_path, "a.jsonl", seed=0)
+    b = _traced_jsonl(tmp_path, "b.jsonl", seed=7)
+    diff = diff_traces(read_jsonl(a), read_jsonl(b))
+    assert regressions(diff) == []
+    assert obs_main(["diff", str(a), str(b)]) == 0
+
+
+def test_diff_fails_on_degraded_run(tmp_path, capsys):
+    """Acceptance: halving the replica cap under the same load regresses
+    past the gate -> non-zero CLI exit."""
+    a = _traced_jsonl(tmp_path, "a.jsonl", max_replicas=4)
+    b = _traced_jsonl(tmp_path, "b.jsonl", max_replicas=1)
+    diff = diff_traces(read_jsonl(a), read_jsonl(b))
+    assert regressions(diff)
+    assert obs_main(["diff", str(a), str(b)]) == 1
+    assert "REGRESSIONS" in capsys.readouterr().out
+
+
+def test_diff_self_is_clean_and_fail_on_overrides(tmp_path, capsys):
+    a = _traced_jsonl(tmp_path, "a.jsonl")
+    diff = diff_traces(read_jsonl(a), read_jsonl(a))
+    assert diff["event_mix"] == {}
+    assert diff["scaling"]["first_divergence"] is None
+    assert regressions(diff) == []
+    # a tightened override still passes on the identical trace ...
+    assert obs_main(["diff", str(a), str(a), "--fail-on",
+                     "ttft_p99=0.0001"]) == 0
+    # ... and an unknown metric is an error, not a silent no-op
+    with pytest.raises(KeyError):
+        regressions(diff, {"no_such_metric": 1.0})
+    capsys.readouterr()
+
+
+# ------------------------------------------------------------- dashboard
+class _HTMLCheck(html.parser.HTMLParser):
+    def __init__(self):
+        super().__init__()
+        self.tags = []
+
+    def handle_starttag(self, tag, attrs):
+        self.tags.append(tag)
+
+
+def test_dashboard_renders_selfcontained_html(tmp_path, capsys):
+    tr = Tracer("request")
+    _run("autoscaled", tracer=tr, monitor=_monitor(window=2.0))
+    doc = render_html(tr.events, tr.meta)
+    assert len(doc) > 5000
+    p = _HTMLCheck()
+    p.feed(doc)
+    assert p.tags.count("svg") >= 3  # arrivals, ribbon, replicas at least
+    assert "viz-root" in doc and "<script" not in doc
+    assert "NaN" not in doc
+    # and through the CLI: --html writes the same page
+    trace = tmp_path / "t.jsonl"
+    write_jsonl(tr.events, trace, tr.meta)
+    out_html = tmp_path / "dash.html"
+    assert obs_main(["report", str(trace), "--html", str(out_html),
+                     "--slo-ttft", "0.5", "--slo-window", "2"]) == 0
+    assert "offline SLO replay:" in capsys.readouterr().out
+    assert out_html.read_text().startswith("<!DOCTYPE html>")
+
+
+def test_dashboard_degrades_on_summary_level_trace():
+    _, mon = None, None
+    tr, mon = _burst_monitor()
+    doc = render_html(tr.events, tr.meta if tr.meta else {"horizon": 40.0})
+    assert "alert ribbon" in doc  # the burst fired, the ribbon renders
+    assert "viz-root" in doc

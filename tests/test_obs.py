@@ -450,3 +450,154 @@ def test_static_fleet_savings_frac_is_zero():
     assert prov["replica_hours"] == pytest.approx(
         prov["replica_hours_static_peak"])
     assert prov["savings_frac"] == pytest.approx(0.0, abs=1e-12)
+
+
+# ----------------------------- satellite: windowed-aggregator robustness
+def test_windowed_aggregator_tolerates_out_of_order():
+    """Late/early observations land in the window their own timestamp
+    selects, and `_last` tracks the latest-t sample, not the latest
+    add()."""
+    agg = WindowedAggregator(1.0)
+    agg.add(2.5, "q", 10.0)
+    agg.add(0.5, "q", 1.0)   # arrives late; lands in window 0
+    agg.add(2.1, "q", 3.0)   # earlier t within window 2: last stays 10
+    rows = agg.rows()
+    assert [r["t0"] for r in rows] == [0.0, 2.0]
+    assert rows[0]["q_n"] == 1 and rows[0]["q_last"] == 1.0
+    assert rows[1]["q_n"] == 2 and rows[1]["q_min"] == 3.0
+    assert rows[1]["q_last"] == 10.0
+
+
+def test_windowed_aggregator_emits_gap_rows():
+    agg = WindowedAggregator(1.0)
+    agg.add(0.5, "q", 1.0)
+    agg.add(3.5, "q", 2.0)
+    rows = agg.rows(fill_gaps=True)
+    assert [r["t0"] for r in rows] == [0.0, 1.0, 2.0, 3.0]
+    assert rows[1] == {"t0": 1.0, "t1": 2.0, "gap": True}
+    assert rows[2] == {"t0": 2.0, "t1": 3.0, "gap": True}
+    assert len(agg.rows()) == 2  # default stays sparse
+    assert WindowedAggregator(1.0).rows(fill_gaps=True) == []
+
+
+def test_windowed_aggregator_range_stats():
+    agg = WindowedAggregator(0.5)
+    for i in range(10):
+        agg.add(0.5 * i + 0.25, "bad", float(i % 2))
+    assert agg.range_stats("bad", 0.0, 5.0) == {"n": 10, "sum": 5.0}
+    assert agg.range_stats("bad", 1.0, 2.0) == {"n": 2, "sum": 1.0}
+    assert agg.range_stats("bad", 10.0, 12.0) == {"n": 0, "sum": 0.0}
+
+
+def test_csv_gap_rows_keep_time_axis_contiguous():
+    events = [
+        {"ev": "counter", "name": "q", "t": 0.1, "value": 1.0, "track": "r0"},
+        {"ev": "counter", "name": "q", "t": 2.6, "value": 2.0, "track": "r0"},
+    ]
+    rows = csv_rows(events, window=1.0)
+    assert [r["t0"] for r in rows] == [0.0, 1.0, 2.0]
+    gap = rows[1]
+    assert gap["n"] == 0 and gap["mean"] == "" and gap["series"] == "q"
+
+
+# ------------------------------- satellite: quantile-sketch edge cases
+def test_p2_constant_stream_is_exact():
+    q = P2Quantile(0.99)
+    for _ in range(100):
+        q.add(3.0)
+    assert q.value() == 3.0
+    sq = StreamingQuantiles()
+    for _ in range(50):
+        sq.add(1.25)
+    for p in (50, 95, 99, 99.9):
+        assert sq.quantile(p) == 1.25
+    assert sq.mean == 1.25
+
+
+def test_p2_tiny_streams_are_numpy_exact():
+    for n in (0, 1, 2, 3, 4, 5):
+        q = P2Quantile(0.5)
+        xs = [float(7 - i) for i in range(n)]
+        for x in xs:
+            q.add(x)
+        want = float(np.percentile(xs, 50)) if xs else 0.0
+        assert q.value() == want, n
+
+
+def test_streaming_duplicate_heavy_input():
+    """A stream drawn from a tiny value set (heavy duplicates) must stay
+    within the sketch's tolerance and produce plausible values."""
+    rng = np.random.default_rng(3)
+    xs = rng.choice([0.1, 0.2, 0.3], size=5000, p=[0.9, 0.09, 0.01])
+    sq = StreamingQuantiles()
+    for x in xs:
+        sq.add(float(x))
+    assert sq.quantile(99.9) == float(np.percentile(xs, 99.9))  # exact tail
+    assert abs(sq.quantile(50) - float(np.percentile(xs, 50))) <= 0.1
+    assert 0.1 <= sq.quantile(50) <= 0.3
+
+
+def test_pct_key_formatting():
+    assert pct_key("ttft", 99) == "ttft_p99"
+    assert pct_key("ttft", 99.0) == "ttft_p99"
+    assert pct_key("ttft", 99.9) == "ttft_p99.9"
+    assert pct_key("e2e", 50) == "e2e_p50"
+    out = percentile_summary([1.0], "x", pcts=(99, 99.9))
+    assert set(out) == {"x_p99", "x_p99.9", "x_mean"}
+
+
+# --------------------------------- satellite: deterministic report topk
+def test_report_topk_ties_break_by_rid():
+    events = [
+        {"ev": "instant", "name": "request.complete", "t": 1.0, "track": "r0",
+         "rid": rid, "attrs": {"ttft": 0.1, "tpot": 0.01, "e2e": 1.0}}
+        for rid in (5, 1, 9, 3)
+    ]
+    rep = analyze(events, {"horizon": 2.0}, topk=3)
+    assert [r["rid"] for r in rep["slowest"]] == [1, 3, 5]
+
+
+# --------------------------------- satellite: counter downsampling
+def test_tracer_counter_dt_downsamples_per_series():
+    tr = Tracer("replica", counter_dt=1.0)
+    for i in range(10):
+        tr.counter("queue", 0.25 * i, float(i), "r0")   # every 0.25s
+        tr.counter("kv_used", 0.25 * i, float(i), "r0")
+    tr.counter("queue", 0.0, 0.0, "r1")  # other track: independent budget
+    qs = [e for e in tr.events if e["name"] == "queue" and e["track"] == "r0"]
+    assert [e["t"] for e in qs] == [0.0, 1.0, 2.0]
+    assert len([e for e in tr.events if e["name"] == "kv_used"]) == 3
+    assert len([e for e in tr.events if e["track"] == "r1"]) == 1
+    # dt=0 (the default) keeps every sample
+    tr0 = Tracer("replica")
+    for i in range(10):
+        tr0.counter("queue", 0.25 * i, float(i), "r0")
+    assert len(tr0.events) == 10
+
+
+def test_tracer_sink_sees_events_and_sink_emits_are_recorded():
+    class Sink:
+        def __init__(self):
+            self.seen = []
+            self.tr = None
+
+        def bind(self, tracer):
+            self.tr = tracer
+
+        def on_event(self, ev):
+            self.seen.append(ev["name"])
+            if ev["name"] == "ping":
+                # sink-emitted events are recorded but not re-dispatched
+                self.tr.instant("pong", ev["t"])
+
+    tr = Tracer("request")
+    sink = Sink()
+    tr.add_sink(sink)
+    tr.instant("ping", 1.0)
+    assert sink.seen == ["ping"]
+    assert [e["name"] for e in tr.events] == ["ping", "pong"]
+    # keep_events=False: sink-only mode records nothing
+    tr2 = Tracer("request", keep_events=False)
+    tr2.add_sink(sink)
+    tr2.instant("ping", 2.0)
+    assert tr2.events == [] and sink.seen == ["ping", "ping"]
