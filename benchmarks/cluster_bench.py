@@ -14,6 +14,7 @@ from repro.obs import Tracer
 from repro.core.hardware import H100_SXM
 from repro.sim import LengthDist, SchedConfig, ServingCostModel, Workload, simulate
 from repro.cluster import (
+    ChaosConfig,
     ClusterSpec,
     PrefixCacheConfig,
     ReplicaSpec,
@@ -148,6 +149,31 @@ def bench_cluster():
         f";events={tr_holder[0]}"
         f";counter_dt1_us={t_dt * 1e6:.0f}"
         f";counter_dt1_events={tr_holder[-1]}",
+    ))
+
+    # chaos overhead: the fault-injection plumbing must be free when no
+    # faults are configured — a zero-rate ChaosConfig draws no RNG, adds
+    # nothing to the event merge, and stays bit-identical to chaos=None
+    t_plain = _best_of(3, lambda: simulate_cluster(
+        reqs, cfg, _spec(["mixed"] * 4), _cost_cache=cache))
+    chaosless = ClusterSpec(replicas=_spec(["mixed"] * 4).replicas,
+                            chaos=ChaosConfig())
+    t_chaosless = _best_of(3, lambda: simulate_cluster(
+        reqs, cfg, chaosless, _cost_cache=cache))
+    chaos_spec = ClusterSpec(
+        replicas=_spec(["mixed"] * 4).replicas,
+        chaos=ChaosConfig(seed=9, horizon=10.0, crash_rate=0.1,
+                          straggler_rate=0.2, link_rate=0.1))
+    s = summarize_cluster(simulate_cluster(reqs, cfg, chaos_spec,
+                                           _cost_cache=cache), **SLO)
+    rows.append((
+        "cluster/chaos-overhead",
+        t_plain * 1e6,
+        f"chaos_off_us={t_chaosless * 1e6:.0f}"
+        f";overhead={t_chaosless / t_plain - 1.0:+.1%}"
+        f";chaos_on_goodput={s['goodput_frac']:.2f}"
+        f";crashes={s['chaos_crashes']}"
+        f";lost={s['requests_lost']}",
     ))
 
     # single-replica cluster must equal repro.sim.simulate exactly

@@ -82,6 +82,24 @@ python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 24 \
 python -m repro.obs diff tests/goldens/cluster_small.jsonl \
     "$TRACE_DIR/golden.jsonl" --fail-on ttft_p99=0.05,e2e_p99=0.05
 
+# chaos smokes: scripted fault injection, a straggler window in the
+# single-replica CLI, the admission front door, and the planner's
+# N-replica-loss mode; the resilience example must hold its goodput claim
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 3 --qps 24 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode colocated \
+    --chaos-crashes 0.1 --chaos-stragglers 0.2 --chaos-seed 9 \
+    --chaos-horizon 5 | grep "chaos:" > /dev/null
+python -m repro.sim --config qwen3_14b --hw h100 --qps 16 --requests 12 \
+    --slots 4 --sweep '' --ctx-quantum 32 --policy continuous \
+    --slowdown 3 --slowdown-at 0 --slowdown-for 5 > /dev/null
+python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 --qps 32 \
+    --requests 24 --slots 4 --ctx-quantum 32 --mode colocated \
+    --admission-policy token_bucket --admission-rate 16 --admission-burst 4 \
+    --admission-queue 2 | grep "door \[" > /dev/null
+python -m repro.cluster --config qwen3_14b --hw h100 --qps 16 --requests 16 \
+    --slots 4 --ctx-quantum 32 --plan --plan-max-replicas 3 --plan-loss 1
+python examples/chaos_resilience.py > /dev/null
+
 # docs: the generated CLI reference must match the parsers; links resolve
 python scripts/gen_cli_docs.py --check
 python scripts/check_docs.py

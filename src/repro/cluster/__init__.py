@@ -31,6 +31,13 @@ actually planned against:
     `simulate_cluster(..., autoscale=)` under diurnal/bursty traces —
     fleet-wide, or per-pool for disaggregated clusters
     (`autoscale={"prefill": ..., "decode": ...}`).
+  * `chaos` — seeded fault injection (replica crashes with KV loss and
+    prefix-cache restore, stragglers, KV-link degradation, correlated
+    node failures) plus the admission front door (token bucket / circuit
+    breaker) that sheds overload BEFORE dispatch; `ClusterSpec.chaos` /
+    `ClusterSpec.admission` thread both through the engine, and
+    `plan_capacity(..., loss_tolerance=N)` sizes fleets that survive
+    N-replica loss.
 
 CLI:
 
@@ -46,6 +53,13 @@ from repro.cluster.autoscale import (
     AUTOSCALE_POLICIES,
     AutoscaleConfig,
     Autoscaler,
+)
+from repro.cluster.chaos import (
+    ADMISSION_POLICIES,
+    CHAOS_KINDS,
+    AdmissionConfig,
+    ChaosConfig,
+    ChaosEvent,
 )
 from repro.cluster.cluster import (
     POOLS,
@@ -72,9 +86,14 @@ from repro.cluster.planner import (
 from repro.cluster.router import ROUTERS, ReplicaView, Router, make_router
 
 __all__ = [
+    "ADMISSION_POLICIES",
     "AUTOSCALE_POLICIES",
+    "AdmissionConfig",
     "AutoscaleConfig",
     "Autoscaler",
+    "CHAOS_KINDS",
+    "ChaosConfig",
+    "ChaosEvent",
     "ClusterResult",
     "ClusterSpec",
     "DEFAULT_PRICE_PER_DEV_HR",

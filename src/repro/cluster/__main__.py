@@ -34,6 +34,19 @@ suffix (.json = Chrome trace-event for Perfetto, .jsonl = event log for
 `--trace-counter-dt`. With `--mode both` the mode is suffixed into the
 filename (out.colocated.json, out.disaggregated.json).
 
+`--chaos-crashes/--chaos-stragglers/--chaos-links/--chaos-nodes R` inject
+seeded faults at rate R events/s over `--chaos-horizon` (crashes lose
+in-flight KV; displaced requests re-prefill or restore from a surviving
+replica's prefix cache), with `--chaos-node-group` replicas killed per
+correlated node failure; the summary gains requests-lost, re-prefill,
+and recovery-time columns. `--admission-policy token_bucket|breaker`
+puts an overload front door ahead of dispatch (`--admission-rate/
+--admission-burst/--admission-queue` for GCRA, `--breaker-*` for the
+circuit breaker). `--retry-backoff/--retry-jitter` shape the seeded
+exponential shed-retry backoff; `--spare` holds N+k redundancy above the
+autoscale policy's ask; `--plan-loss N` makes `--plan` size fleets that
+still clear the attainment bar after losing N replicas.
+
 `--slo-window W` turns on the live SLO monitor: TTFT p99 <= `--slo-ttft`
 and (if given) goodput >= `--slo-goodput`, judged over tumbling
 W-second windows at sim time, with SRE-style fast/slow burn-rate alerts
@@ -52,9 +65,12 @@ from repro.configs import get_config
 from repro.obs import LEVELS, SLOMonitor, make_slos, make_tracer, write_trace
 from repro.sim import ADMISSIONS, LengthDist, SchedConfig, Workload
 from repro.cluster import (
+    ADMISSION_POLICIES,
     AUTOSCALE_POLICIES,
     ROUTERS,
+    AdmissionConfig,
     AutoscaleConfig,
+    ChaosConfig,
     ClusterSpec,
     PrefixCacheConfig,
     ReplicaSpec,
@@ -199,6 +215,52 @@ def build_parser() -> argparse.ArgumentParser:
                    help="shed arrivals when every replica's depth >= this")
     p.add_argument("--retry-after", type=float, default=0.5)
     p.add_argument("--max-retries", type=int, default=2)
+    p.add_argument("--retry-backoff", type=float, default=2.0,
+                   help="exponential shed-retry backoff base (1 = legacy "
+                        "fixed delay)")
+    p.add_argument("--retry-jitter", type=float, default=0.5,
+                   help="seeded retry jitter amplitude (0 = none)")
+    p.add_argument("--spare", type=int, default=0,
+                   help="autoscale N+k redundancy: replicas held above the "
+                        "policy's ask to absorb a crash")
+    p.add_argument("--plan-loss", type=int, default=0,
+                   help="--plan: require candidates to clear the attainment "
+                        "bar even after losing this many replicas "
+                        "(worst-case pool split)")
+    # seeded fault injection (repro.cluster.chaos)
+    p.add_argument("--chaos-seed", type=int, default=0)
+    p.add_argument("--chaos-horizon", type=float, default=120.0,
+                   help="seconds of simulated time chaos events are "
+                        "sampled over")
+    p.add_argument("--chaos-crashes", type=float, default=0.0,
+                   help="replica crash rate (events/s; 0 = off)")
+    p.add_argument("--chaos-stragglers", type=float, default=0.0,
+                   help="straggler onset rate (events/s; 0 = off)")
+    p.add_argument("--chaos-links", type=float, default=0.0,
+                   help="KV-handoff link degradation rate (events/s)")
+    p.add_argument("--chaos-nodes", type=float, default=0.0,
+                   help="correlated node-failure rate (events/s)")
+    p.add_argument("--chaos-node-group", type=int, default=2,
+                   help="replicas killed per correlated node failure")
+    # admission front door (evaluated before dispatch)
+    p.add_argument("--admission-policy", default=None,
+                   choices=list(ADMISSION_POLICIES),
+                   help="overload front door ahead of dispatch "
+                        "(default: none)")
+    p.add_argument("--admission-rate", type=float, default=0.0,
+                   help="token_bucket: sustained admits/s")
+    p.add_argument("--admission-burst", type=int, default=1,
+                   help="token_bucket: burst depth in requests")
+    p.add_argument("--admission-queue", type=int, default=0,
+                   help="token_bucket: door-queue slots beyond the bucket")
+    p.add_argument("--breaker-threshold", type=float, default=0.5,
+                   help="breaker: rolling failure fraction that trips OPEN")
+    p.add_argument("--breaker-window", type=float, default=10.0,
+                   help="breaker: rolling terminal-outcome window (s)")
+    p.add_argument("--breaker-cooloff", type=float, default=5.0,
+                   help="breaker: OPEN hold before HALF_OPEN probing (s)")
+    p.add_argument("--breaker-probes", type=int, default=3,
+                   help="breaker: HALF_OPEN trial admissions")
     return p
 
 
@@ -242,6 +304,23 @@ def main(argv=None) -> None:
             budget_bytes=args.cache_gb * 1e9 if args.cache_gb is not None
             else None,
             ttl=args.cache_ttl)
+    chaos = None
+    if any(r > 0 for r in (args.chaos_crashes, args.chaos_stragglers,
+                           args.chaos_links, args.chaos_nodes)):
+        chaos = ChaosConfig(
+            seed=args.chaos_seed, horizon=args.chaos_horizon,
+            crash_rate=args.chaos_crashes,
+            straggler_rate=args.chaos_stragglers,
+            link_rate=args.chaos_links,
+            node_failure_rate=args.chaos_nodes,
+            node_group=args.chaos_node_group)
+    admission = None
+    if args.admission_policy is not None:
+        admission = AdmissionConfig(
+            policy=args.admission_policy, rate=args.admission_rate,
+            burst=args.admission_burst, queue_depth=args.admission_queue,
+            window=args.breaker_window, fail_thresh=args.breaker_threshold,
+            cooloff=args.breaker_cooloff, probes=args.breaker_probes)
     autoscale = None
     if args.autoscale or args.pool_autoscale:
         base = AutoscaleConfig(
@@ -250,7 +329,7 @@ def main(argv=None) -> None:
             window=args.scale_window, target_qps_per_replica=args.target_qps,
             slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot,
             warmup=args.warmup, lookahead=args.lookahead,
-            target_wait=args.target_wait)
+            target_wait=args.target_wait, spare=args.spare)
 
         def _pool_cfg(policy: str) -> AutoscaleConfig:
             asc = replace(base, policy=policy)
@@ -277,10 +356,12 @@ def main(argv=None) -> None:
         if len(hws) > 1:
             print(f"# note: --plan sweeps homogeneous fleets; using {hws[0]!r} "
                   f"(ignoring {', '.join(hws[1:])})")
-        if autoscale is not None or args.shed_depth is not None:
-            print("# note: --plan sizes STATIC fleets; --autoscale/--shed-* "
-                  "flags are ignored by the sweep (drop --plan to run the "
-                  "dynamic fleet)")
+        if autoscale is not None or args.shed_depth is not None \
+                or chaos is not None or admission is not None:
+            print("# note: --plan sizes STATIC fault-free fleets; "
+                  "--autoscale/--shed-*/--chaos-*/--admission-* flags are "
+                  "ignored by the sweep (drop --plan to run the dynamic "
+                  "fleet; --plan-loss sizes for N-replica loss)")
         sched = SchedConfig(policy=args.policy, slots=args.slots,
                             token_budget=args.token_budget,
                             admission=args.admission, slo_ttft=args.slo_ttft)
@@ -296,12 +377,18 @@ def main(argv=None) -> None:
             kv_block_tokens=args.block_tokens, ctx_quantum=args.ctx_quantum,
             max_replicas=args.plan_max_replicas,
             prefix_cache=None if cache_fracs else pcache,
-            cache_fracs=cache_fracs, cache_ttl=args.cache_ttl)
+            cache_fracs=cache_fracs, cache_ttl=args.cache_ttl,
+            loss_tolerance=args.plan_loss)
         print(f"# capacity plan: {cfg.name} @ {args.qps:g} qps, "
               f"SLO ttft<={args.slo_ttft:g}s tpot<={args.slo_tpot:g}s, "
-              f"attainment>={args.attainment:.0%}")
+              f"attainment>={args.attainment:.0%}"
+              + (f", survives loss of {args.plan_loss}"
+                 if args.plan_loss else ""))
+        loss_col = f" {'-' + str(args.plan_loss) + 'rep':>7}" \
+            if args.plan_loss else ""
         hdr = (f"{'mode':<14} {'repl':>4} {'P/D':>5} {'cache':>6} {'$/hr':>7} "
-               f"{'attain':>7} {'ttft_p95':>9} {'tpot_p95':>9} {'feasible':>9}")
+               f"{'attain':>7}{loss_col} {'ttft_p95':>9} {'tpot_p95':>9} "
+               f"{'feasible':>9}")
         print(hdr)
         print("-" * len(hdr))
         for r in plan["rows"]:
@@ -311,11 +398,14 @@ def main(argv=None) -> None:
                   else f"{r['cache_frac']:.2f}")
             if "error" in r:
                 print(f"{r['mode']:<14} {r['replicas']:>4} {pd:>5} {cf:>6} "
-                      f"{r['cost_per_hr']:>7.2f} {'-':>7} {'-':>9} {'-':>9} "
-                      f"{'no (kv)':>9}")
+                      f"{r['cost_per_hr']:>7.2f} {'-':>7}"
+                      + (f" {'-':>7}" if args.plan_loss else "")
+                      + f" {'-':>9} {'-':>9} {'no (kv)':>9}")
                 continue
+            loss = (f" {r['goodput_frac_loss']:>7.0%}"
+                    if args.plan_loss else "")
             print(f"{r['mode']:<14} {r['replicas']:>4} {pd:>5} {cf:>6} "
-                  f"{r['cost_per_hr']:>7.2f} {r['goodput_frac']:>7.0%} "
+                  f"{r['cost_per_hr']:>7.2f} {r['goodput_frac']:>7.0%}{loss} "
                   f"{r['ttft_p95']:>8.2f}s {r['tpot_p95'] * 1e3:>7.1f}ms "
                   f"{'YES' if r['feasible'] else 'no':>9}")
         best = plan["best"]
@@ -361,7 +451,11 @@ def main(argv=None) -> None:
                            shed_depth=args.shed_depth,
                            retry_after=args.retry_after,
                            max_retries=args.max_retries,
-                           prefix_cache=pcache)
+                           retry_backoff=args.retry_backoff,
+                           retry_jitter=args.retry_jitter,
+                           retry_seed=args.seed,
+                           prefix_cache=pcache,
+                           chaos=chaos, admission=admission)
         tracer = make_tracer(args.trace_level if args.trace else "off",
                              counter_dt=args.trace_counter_dt)
         monitor = None
@@ -382,7 +476,9 @@ def main(argv=None) -> None:
         results[mode] = (spec, cres, s)
         label = mode if mode == "colocated" else f"disagg {n_p}P/{n - n_p}D"
         print(_fmt_row(label, s))
-        if tracer.enabled:
+        if tracer.enabled and args.trace:
+            # the SLO monitor can force the tracer on without
+            # --trace; only export when a path was actually given
             path = args.trace
             if len(modes) > 1:
                 root, ext = os.path.splitext(path)
@@ -412,6 +508,24 @@ def main(argv=None) -> None:
               + (f", shed={s['shed']} ({s['shed_frac']:.1%}), "
                  f"retries={s['retries']}"
                  if args.shed_depth is not None else ""))
+        if cres.chaos_stats is not None:
+            ch = cres.chaos_stats
+            print(f"  chaos: {ch['crashes']} crashes, "
+                  f"{ch['stragglers']} stragglers, "
+                  f"{ch['link_degrades']} link degradations | "
+                  f"lost={s['requests_lost']} requests, "
+                  f"displaced={ch['displaced']} "
+                  f"(re-prefill {ch['re_prefill_tokens']} tok, "
+                  f"restored {ch['restored_tokens']} tok), "
+                  f"recovery mean/max "
+                  f"{ch['recovery_s_mean']:.2f}/{ch['recovery_s_max']:.2f}s")
+        if cres.admission_stats is not None:
+            ad = cres.admission_stats
+            print(f"  door [{ad['policy']}]: {ad['door_admitted']} admitted, "
+                  f"{ad['door_delayed']} delayed, {ad['door_shed']} shed"
+                  + (f", {ad['breaker_opens']} opens "
+                     f"(final state {ad['breaker_state']})"
+                     if ad["policy"] == "breaker" else ""))
         if cres.slo is not None:
             print(f"  slo monitor: time_in_violation="
                   f"{s['time_in_violation']:g}s, "

@@ -111,6 +111,15 @@ class RollingMeanWindow:
             return 0.0
         return sum(v for _, v in q) / len(q)
 
+    def count(self, now: float) -> int:
+        """Number of observations still inside [now - window, now] — the
+        sample-size gate the admission circuit breaker trips on."""
+        q = self._q
+        horizon = now - self.window
+        while q and q[0][0] < horizon:
+            q.popleft()
+        return len(q)
+
 
 class RollingFlagWindow(RollingMeanWindow):
     """Rolling violation fraction: a `RollingMeanWindow` over 0/1 flags —
@@ -172,6 +181,10 @@ class AutoscaleConfig:
                               against [s/token].
       kv_hi / kv_lo           `kv_tpot` hysteresis band on mean KV
                               occupancy fraction [0..1].
+      spare                   N+k redundancy: replicas held above every
+                              policy's ask (within the clamp), absorbing
+                              a crash while the replacement warms
+                              [replicas].
     """
 
     policy: str = "rate"
@@ -200,6 +213,10 @@ class AutoscaleConfig:
     slo_tpot: float = 0.05  # s/token TPOT deadline for the debt signal
     kv_hi: float = 0.85  # KV occupancy fraction: scale up above
     kv_lo: float = 0.40  # KV occupancy fraction: scale down below
+    # N+k redundancy: replicas held ABOVE what the policy asks for, so a
+    # crash (repro.cluster.chaos) leaves the policy's desired capacity
+    # intact while the replacement warms (0 = size for steady state)
+    spare: int = 0
 
     def validate(self) -> None:
         """Raise ValueError on any out-of-domain field combination."""
@@ -228,6 +245,8 @@ class AutoscaleConfig:
             raise ValueError("service_cv2 must be >= 0")
         if self.mean_prompt < 1 or self.mean_output < 1:
             raise ValueError("mean_prompt and mean_output must be >= 1")
+        if self.spare < 0:
+            raise ValueError("spare must be >= 0")
         if not 0.0 <= self.wait_lo <= self.wait_hi:
             raise ValueError("need 0 <= wait_lo <= wait_hi")
         if self.slo_tpot <= 0:
@@ -447,7 +466,10 @@ class Autoscaler:
                 want = provisioned
             inputs = {"slo_debt": debt, "debt_hi": asc.debt_hi,
                       "debt_lo": asc.debt_lo}
-        clamped = max(asc.min_replicas, min(asc.max_replicas, want))
+        # N+k redundancy rides on top of every policy's ask (still inside
+        # the [min, max] clamp: spares never exceed the fleet's ceiling)
+        clamped = max(asc.min_replicas,
+                      min(asc.max_replicas, want + asc.spare))
         self.last_decision = {"policy": asc.policy, "provisioned": provisioned,
                               **inputs, "want_raw": want, "want": clamped}
         return clamped

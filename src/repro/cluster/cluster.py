@@ -54,9 +54,19 @@ pays a measurable re-warm cost.
 
 Optionally the cluster sheds load instead of queueing without bound:
 when every eligible replica's depth is at `shed_depth`, the arrival is
-retried `retry_after` seconds later (up to `max_retries` times) and then
-dropped. Every generated request is therefore exactly once completed or
-shed — an invariant the tests pin.
+retried after a seeded exponential backoff with jitter (base
+`retry_after`, up to `max_retries` times) and then dropped. Every
+generated request is therefore exactly once completed or shed — an
+invariant the tests pin, and that survives fault injection: with
+`ClusterSpec.chaos` set, seeded replica crashes, stragglers, link
+degradations, and correlated node failures (`repro.cluster.chaos`) are
+merged into the event loop, crash-displaced requests re-enter dispatch
+(re-prefilling or restoring from a surviving replica's prefix cache),
+and anything parked when a pool dies is a counted loss, never a silent
+disappearance. `ClusterSpec.admission` adds an overload front door
+(token bucket or circuit breaker) that sheds or delays arrivals BEFORE
+routing. Chaos off and no door leave the engine bit-identical to the
+fault-free path.
 
 Cluster-level records stitch the per-stage records back into one
 `ReqRecord` per request (arrival at the cluster, TTFT from the prefill
@@ -70,6 +80,8 @@ import heapq
 from collections import deque
 from dataclasses import dataclass, field, replace
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.core import comm as C
 from repro.core.hardware import HardwareSpec, NetLevel, get_hardware
@@ -80,6 +92,12 @@ from repro.sim.scheduler import ReplicaSim, ReqRecord, SchedConfig, SimResult
 from repro.sim.workload import SimRequest
 
 from repro.cluster.autoscale import AutoscaleConfig, Autoscaler
+from repro.cluster.chaos import (
+    AdmissionConfig,
+    ChaosConfig,
+    make_admission,
+    pick_victims,
+)
 from repro.cluster.prefixcache import (
     FleetPrefixCache,
     PrefixCacheConfig,
@@ -131,11 +149,26 @@ class ClusterSpec:
     debt_window: float = 30.0  # slo_debt router's rolling window (s)
     # cross-replica load shedding (None = queue without bound)
     shed_depth: int | None = None  # shed when EVERY eligible depth >= this
-    retry_after: float = 0.5  # seconds before a shed arrival is retried
+    retry_after: float = 0.5  # base backoff before a shed arrival is retried
     max_retries: int = 2  # retries before the request is dropped
+    # exponential backoff with seeded jitter: retry k (0-based) waits
+    # `retry_after * retry_backoff**k * (1 + retry_jitter * U[0,1))` —
+    # jitter de-synchronizes a burst that shed together so it does not
+    # retry together forever (the thundering-herd fix). The jitter stream
+    # is a dedicated `SeedSequence(retry_seed)` spawn, so workload
+    # streams are unperturbed; `retry_backoff=1, retry_jitter=0` recovers
+    # the legacy fixed delay exactly (and draws no random numbers).
+    retry_backoff: float = 2.0
+    retry_jitter: float = 0.5
+    retry_seed: int = 0
     # modeled prefix cache (None = the legacy unconditional hit_frac
     # discount for the affinity router, no discount for other routers)
     prefix_cache: PrefixCacheConfig | None = None
+    # seeded fault injection (None / all-zero rates = chaos off: the
+    # engine schedule is bit-identical to the chaos-free engine)
+    chaos: ChaosConfig | None = None
+    # admission front door (None = every arrival goes straight to routing)
+    admission: AdmissionConfig | None = None
 
     @property
     def disaggregated(self) -> bool:
@@ -164,6 +197,14 @@ class ClusterSpec:
                 raise ValueError("shed_depth must be >= 1")
             if self.retry_after <= 0 or self.max_retries < 0:
                 raise ValueError("need retry_after > 0 and max_retries >= 0")
+        if self.retry_backoff < 1.0:
+            raise ValueError("retry_backoff must be >= 1.0")
+        if self.retry_jitter < 0.0:
+            raise ValueError("retry_jitter must be >= 0")
+        if self.chaos is not None:
+            self.chaos.validate()
+        if self.admission is not None:
+            self.admission.validate()
         if self.disaggregated:
             if self.pool_indices("mixed"):
                 raise ValueError(
@@ -210,6 +251,15 @@ class ClusterResult:
     scale_events: list[dict] = field(default_factory=list)
     shed: list[SimRequest] = field(default_factory=list)
     retries: int = 0
+    # requests terminally lost to outages (no accepting replica could
+    # ever serve them, or work parked past the horizon) — a subset of
+    # `shed` attributable to availability, not overload
+    requests_lost: int = 0
+    # fault-injection counters (None when chaos is off; see
+    # `repro.cluster.chaos`)
+    chaos_stats: dict | None = None
+    # admission front-door counters (None when no door is configured)
+    admission_stats: dict | None = None
     # modeled-prefix-cache counters (None when the cache is not modeled)
     cache_stats: dict | None = None
     # online SLO monitor result (`SLOMonitor.result()`; None unmonitored)
@@ -288,6 +338,7 @@ class _Rep:
     ready: float  # accepting traffic from here (started + warmup)
     drain_start: float = -1.0  # >= 0: no new admissions
     retired: float = -1.0  # drained; billing ends
+    crashed: bool = False  # retired by fault injection, not a drain
 
     @property
     def draining(self) -> bool:
@@ -314,11 +365,12 @@ def _views(reps: list[_Rep], idxs: list[int], *,
 
 class _ClusterEngine:
     """Shared event loop for colocated and disaggregated clusters, with
-    optional autoscaling. Events, in tie-break order at equal times:
-    request arrivals, shed-retry re-arrivals, KV-handoff completions,
-    autoscaler control ticks. Between events every replica is advanced to
-    the event time, harvesting completions (prefill handoffs, TTFT
-    feedback to the router and autoscaler, drain progress)."""
+    optional autoscaling and fault injection. Events, in tie-break order
+    at equal times: request arrivals, shed-retry re-arrivals, KV-handoff
+    completions, autoscaler control ticks, chaos events. Between events
+    every replica is advanced to the event time, harvesting completions
+    (prefill handoffs, TTFT feedback to the router and autoscaler, drain
+    progress)."""
 
     def __init__(self, spec: ClusterSpec, cfg: ModelConfig,
                  autoscale: AutoscaleConfig | dict | None, cache: dict,
@@ -397,6 +449,26 @@ class _ClusterEngine:
         self.retries = 0
         self.scale_events: list[dict] = []
         self.xfer_count, self.xfer_bytes, self.xfer_seconds = 0, 0.0, 0.0
+        # seeded backoff jitter: a dedicated stream, created lazily so a
+        # run that never sheds (or sets retry_jitter=0) draws nothing
+        self._retry_rng = None
+        # fault injection: chaos off contributes an empty deque, zero RNG
+        # draws, and nothing to the event merge (bit-identical runs)
+        ch = spec.chaos
+        self.chaos_on = ch is not None and ch.enabled
+        self.chaos_events = deque(ch.schedule()) if self.chaos_on else deque()
+        self._link_windows: list[tuple[float, float, float]] = []
+        self.crashes = self.stragglers = self.link_degrades = 0
+        self.n_displaced = self.requests_lost = self.stalls = 0
+        self.lost_kv_tokens = 0
+        self.re_prefill_tokens = self.restored_tokens = 0
+        self._displaced: set[int] = set()  # crash-displaced, awaiting re-dispatch
+        self._watches: list[dict] = []  # per-crash recovery tracking
+        self._watch_by_rid: dict[int, list[dict]] = {}
+        # admission front door (evaluated per arrival BEFORE routing; the
+        # shed/retry path still applies after dispatch)
+        self.door = (make_admission(spec.admission)
+                     if spec.admission is not None else None)
 
     # ----------------------------------------------------------- fleet changes
     def _cost_for(self, rs: ReplicaSpec) -> ServingCostModel:
@@ -511,7 +583,7 @@ class _ClusterEngine:
             for req in rep.sim.evict_pending(include_staged=True):
                 orig = self.orig[req.rid]
                 nbytes = rep.cost.kv_handoff_bytes(orig.prompt)
-                dt = C.p2p(nbytes, self.xfer_net)
+                dt = self._xfer_dt(nbytes, t)
                 heapq.heappush(self.xfers, (t + dt, self.seq, orig))
                 self.seq += 1
                 self.xfer_count += 1
@@ -601,6 +673,162 @@ class _ClusterEngine:
                                 **scaler.last_decision)
         self._scale_pool(pool, want, t)
 
+    # ------------------------------------------------------------ resilience
+    def _retry_delay(self, attempt: int) -> float:
+        """Exponential backoff with seeded jitter for retry `attempt`
+        (0-based). Jitter spreads a burst that shed together UPWARD from
+        the deterministic base, so existing lower bounds (a retry never
+        lands before `retry_after`) keep holding."""
+        d = self.spec.retry_after * self.spec.retry_backoff ** attempt
+        if self.spec.retry_jitter > 0.0:
+            if self._retry_rng is None:
+                self._retry_rng = np.random.default_rng(
+                    np.random.SeedSequence(self.spec.retry_seed).spawn(1)[0])
+            d *= 1.0 + self.spec.retry_jitter * float(self._retry_rng.random())
+        return d
+
+    def _pool_recoverable(self, pool: str) -> bool:
+        """Can `pool` ever accept traffic again? True while any member is
+        provisioned (a warming replica starts accepting at `ready`) or a
+        control loop exists that will respawn one (scalers always restore
+        their pool to >= min_replicas while work is pending)."""
+        if any(r.pool == pool and r.provisioned for r in self.reps):
+            return True
+        return self.scaler is not None or pool in self.pool_scalers
+
+    def _stall(self, req: SimRequest, t: float, attempt: int) -> None:
+        """No accepting replica in the arrival pool right now (all
+        warming or draining mid-scale-down, or killed by chaos): park the
+        request and retry once capacity can exist — or shed it when
+        nothing can ever accept again. Stalls do not consume retry
+        budget; an outage is not overload."""
+        if self._pool_recoverable(self.arrival_pool):
+            self.stalls += 1
+            heapq.heappush(self.retry_heap,
+                           (t + self._retry_delay(attempt), self.seq,
+                            attempt, req))
+            self.seq += 1
+            if self._tr_sum:
+                self.tracer.instant("request.stall", t, rid=req.rid,
+                                    pool=self.arrival_pool)
+        else:
+            self._lose(req, t, reason="no_capacity", attempts=attempt)
+
+    def _lose(self, req: SimRequest, t: float, *, reason: str,
+              attempts: int = 0) -> None:
+        """Terminal availability loss (dead pool, work parked past the
+        horizon): counted in `shed` for the exactly-once conservation
+        invariant AND in `requests_lost` for the resilience columns."""
+        self.shed.append(req)
+        self.requests_lost += 1
+        self._note_terminal(req.rid, t, ok=False)
+        if self._tr_sum:
+            self.tracer.instant("request.shed", t, rid=req.rid,
+                                reason=reason, attempts=attempts)
+
+    def _note_terminal(self, rid: int, t: float, ok: bool) -> None:
+        """Feed a request's terminal outcome to the admission door (the
+        circuit breaker's failure signal) and close any crash-recovery
+        watches it was displaced into."""
+        if self.door is not None:
+            self.door.observe(rid, t, ok)
+        ws = self._watch_by_rid.pop(rid, None)
+        if ws:
+            for w in ws:
+                w["open"].discard(rid)
+                if not w["open"] and w["dt"] is None:
+                    w["dt"] = t - w["t0"]
+        if not ok:
+            self._displaced.discard(rid)
+
+    def _xfer_dt(self, nbytes: float, t: float) -> float:
+        """KV-handoff transfer time at `t` — the p2p price stretched by
+        any chaos link-degradation window active at the departure."""
+        dt = C.p2p(nbytes, self.xfer_net)
+        if self._link_windows:
+            f = 1.0
+            for t0, t1, factor in self._link_windows:
+                if t0 <= t < t1:
+                    f = max(f, factor)
+            dt *= f
+        return dt
+
+    def _fire_chaos(self, ev) -> None:
+        """Apply one scheduled fault against live fleet state. Victims
+        are selected among the replicas alive at the fire instant via the
+        event's pre-sampled uniforms; an event with no eligible victim is
+        a no-op (the fleet is already dead or fully degraded)."""
+        t = ev.t
+        if ev.kind == "crash" or ev.kind == "node_failure":
+            elig = [i for i, r in enumerate(self.reps) if r.retired < 0]
+            victims = pick_victims(ev.picks, elig, ev.count)
+            if ev.kind == "node_failure" and victims and self._tr_sum:
+                self.tracer.instant("chaos.node_failure", t,
+                                    count=len(victims),
+                                    replicas=list(victims))
+            for i in victims:
+                self._crash(i, t)
+        elif ev.kind == "straggler":
+            elig = [i for i, r in enumerate(self.reps) if r.accepting(t)]
+            for i in pick_victims(ev.picks, elig, 1):
+                self.reps[i].sim.set_slowdown(ev.factor, t + ev.duration,
+                                              start=t)
+                self.stragglers += 1
+                if self._tr_sum:
+                    self.tracer.instant("chaos.straggler", t,
+                                        self.reps[i].sim.name, replica=i,
+                                        factor=ev.factor,
+                                        until=t + ev.duration)
+        else:  # link degradation: cluster-wide handoff-interconnect event
+            self._link_windows.append((t, t + ev.duration, ev.factor))
+            self.link_degrades += 1
+            if self._tr_sum:
+                self.tracer.instant("chaos.link_degrade", t,
+                                    factor=ev.factor, until=t + ev.duration)
+
+    def _crash(self, i: int, t: float) -> None:
+        """Kill replica `i` instantly: billing stops now, in-flight KV is
+        lost, and every unfinished request re-enters dispatch — where it
+        re-prefills from scratch or restores its prefix from a surviving
+        replica's cache (`_dispatch` consults the fleet prefix cache as
+        usual; `re_prefill_tokens`/`restored_tokens` account the split)."""
+        rep = self.reps[i]
+        if rep.retired >= 0:
+            return
+        displaced = rep.sim.kill()
+        rep.retired = t
+        rep.crashed = True
+        self.crashes += 1
+        self.scale_events.append(
+            {"t": t, "action": "crash", "replica": i, "pool": rep.pool})
+        if self._tr_sum:
+            self.tracer.instant("replica.crash", t, rep.sim.name,
+                                pool=rep.pool, replica=i,
+                                displaced=len(displaced))
+        self._on_retired(i)
+        if not displaced:
+            return
+        watch: set[int] = set()
+        for req, cached, generated, started in displaced:
+            rid = req.rid
+            watch.add(rid)
+            if started:
+                # work this replica had begun is lost; the re-dispatch
+                # below accounts what must be re-processed vs restored
+                self._displaced.add(rid)
+                self.n_displaced += 1
+                self.lost_kv_tokens += cached
+            # the dead attempt's handoff spans would disorder the final
+            # attempt's lifecycle in the trace: only the serving attempt
+            # is kept (the crash instant records the disruption)
+            self._handoff_log.pop(rid, None)
+        w = {"t0": t, "open": set(watch), "dt": None}
+        self._watches.append(w)
+        for rid in watch:
+            self._watch_by_rid.setdefault(rid, []).append(w)
+        for req, _, _, _ in displaced:
+            self._dispatch(self.orig[req.rid], t, attempt=0)
+
     # -------------------------------------------------------------- dispatch
     def _dispatch(self, req: SimRequest, t: float, attempt: int) -> None:
         if self.pcache is not None:
@@ -613,22 +841,28 @@ class _ClusterEngine:
                 self.pcache.uncount(*prev)
         elig = [i for i, r in enumerate(self.reps)
                 if r.pool == self.arrival_pool and r.accepting(t)]
-        assert elig, "fleet invariant violated: no accepting replica"
+        if not elig:
+            # zero accepting replicas (all warming/draining during an
+            # aggressive scale-down, or killed by chaos): park and retry
+            # instead of crashing on the empty pool
+            self._stall(req, t, attempt)
+            return
         views = _views(self.reps, elig, at=t)
         if (self.spec.shed_depth is not None
                 and min(v.depth for v in views) >= self.spec.shed_depth):
             if attempt < self.spec.max_retries:
                 self.retries += 1
+                retry_at = t + self._retry_delay(attempt)
                 heapq.heappush(self.retry_heap,
-                               (t + self.spec.retry_after, self.seq,
-                                attempt + 1, req))
+                               (retry_at, self.seq, attempt + 1, req))
                 self.seq += 1
                 if self._tr_sum:
                     self.tracer.instant("request.retry", t, rid=req.rid,
                                         attempt=attempt + 1,
-                                        retry_at=t + self.spec.retry_after)
+                                        retry_at=retry_at)
             else:
                 self.shed.append(req)
+                self._note_terminal(req.rid, t, ok=False)
                 if self._tr_sum:
                     # terminal: shed outright, or dropped after retries
                     self.tracer.instant(
@@ -648,6 +882,13 @@ class _ClusterEngine:
                 self.tracer.counter("cache_bytes", t,
                                     self.pcache.caches[i].used_bytes,
                                     self.reps[i].sim.name)
+        if self._displaced and req.rid in self._displaced:
+            # crash-displaced work lands again: whatever prefix survives
+            # on the chosen replica's cache is restored, the rest of the
+            # prompt is re-prefilled from scratch
+            self._displaced.discard(req.rid)
+            self.re_prefill_tokens += max(0, req.prompt - cached)
+            self.restored_tokens += cached
         if self._tr_req:
             self.tracer.instant("dispatch", t, self.reps[i].sim.name,
                                 rid=req.rid, replica=i, attempt=attempt,
@@ -667,7 +908,21 @@ class _ClusterEngine:
     def _dispatch_xfer(self, ready: float, req: SimRequest) -> None:
         elig = [i for i, r in enumerate(self.reps)
                 if r.pool == "decode" and r.accepting(ready)]
-        assert elig, "fleet invariant violated: no accepting decode replica"
+        if not elig:
+            # the KV landed but no decode replica can take it (all
+            # warming, or killed by chaos): park the transfer until one
+            # can — or shed when the pool can never recover
+            if self._pool_recoverable("decode"):
+                self.stalls += 1
+                heapq.heappush(self.xfers,
+                               (ready + self.spec.retry_after, self.seq, req))
+                self.seq += 1
+                if self._tr_sum:
+                    self.tracer.instant("request.stall", ready, rid=req.rid,
+                                        pool="decode")
+            else:
+                self._lose(req, ready, reason="no_capacity")
+            return
         j, _ = self.d_router.pick(req, _views(self.reps, elig, at=ready))
         self.decode_recs[req.rid] = self.reps[j].sim.push(
             replace(req, arrival=ready), cached=req.prompt, generated=1)
@@ -680,6 +935,12 @@ class _ClusterEngine:
         for rec in done:
             if self._tr_sum:
                 self._emit_terminal(rep, rec)
+            if (self.door is not None or self._watch_by_rid) and (
+                    rep.pool != "prefill"
+                    or self.orig[rec.rid].output <= 1):
+                # last stage of this request finished: feed the admission
+                # door's breaker and close any crash-recovery watches
+                self._note_terminal(rec.rid, rec.finish, ok=True)
             if rep.pool in ("mixed", "prefill") and rec.first_token >= 0:
                 # end-to-end TTFT, from the ORIGINAL arrival: shed-retry
                 # backoff counts as debt (the user waited through it), so
@@ -733,7 +994,7 @@ class _ClusterEngine:
             if req.output <= 1:
                 continue  # single-token request: served entirely by prefill
             nbytes = rep.cost.kv_handoff_bytes(req.prompt)
-            dt = C.p2p(nbytes, self.xfer_net)
+            dt = self._xfer_dt(nbytes, rec.finish)
             heapq.heappush(self.xfers, (rec.finish + dt, self.seq, req))
             self.seq += 1
             self.xfer_count += 1
@@ -833,7 +1094,11 @@ class _ClusterEngine:
             pending = bool(arrivals or self.retry_heap or self.xfers
                            or self._sim_work)
             t_tck = min(next_tick.values()) if next_tick and pending else _INF
-            t_evt = min(t_arr, t_rty, t_xfr, t_tck)
+            # chaos events, like control ticks, fire only while work is
+            # pending: faults against a finished fleet change nothing
+            t_chs = (self.chaos_events[0].t
+                     if self.chaos_events and pending else _INF)
+            t_evt = min(t_arr, t_rty, t_xfr, t_tck, t_chs)
             if t_evt == _INF:
                 if self._sim_work or self.xfers:
                     self._advance_all(_INF)  # final drain (punctual handoffs)
@@ -844,6 +1109,26 @@ class _ClusterEngine:
                 req = arrivals.popleft()
                 for sc in self._signal_scalers:
                     sc.observe_arrival(req.arrival)
+                if self.door is not None:
+                    admit_at = self.door.offer(req.rid, req.arrival)
+                    if admit_at is None:
+                        # shed at the front door, before any dispatch
+                        # attempt: counted in `shed` for conservation but
+                        # attributed to the door, not `requests_lost`
+                        self.shed.append(req)
+                        self._note_terminal(req.rid, req.arrival, ok=False)
+                        if self._tr_sum:
+                            self.tracer.instant("request.shed", req.arrival,
+                                                rid=req.rid,
+                                                reason="admission")
+                        continue
+                    if admit_at > req.arrival:
+                        # door-queued: dispatch at the exact conformance
+                        # time, through the same heap retries use
+                        heapq.heappush(self.retry_heap,
+                                       (admit_at, self.seq, 0, req))
+                        self.seq += 1
+                        continue
                 self._dispatch(req, req.arrival, attempt=0)
             elif t_rty == t_evt:
                 t, _, attempt, req = heapq.heappop(self.retry_heap)
@@ -863,7 +1148,19 @@ class _ClusterEngine:
                         else:
                             self._tick_pool(key, t_evt)
                     next_tick[key] += intervals[key]
+            elif t_chs == t_evt:
+                self._fire_chaos(self.chaos_events.popleft())
             # else: the event was a transfer, consumed by the advance
+        # conservation sweep: anything still parked when the run drains
+        # (a retry scheduled past the last completion on a dead pool, a
+        # handoff stalled forever) is a terminal loss, never a silent
+        # disappearance — completed + shed == generated must hold
+        while self.retry_heap:
+            t, _, attempt, req = heapq.heappop(self.retry_heap)
+            self._lose(req, t, reason="horizon", attempts=attempt)
+        while self.xfers:
+            t, _, req = heapq.heappop(self.xfers)
+            self._lose(req, t, reason="horizon")
 
     # ----------------------------------------------------------------- result
     def result(self) -> ClusterResult:
@@ -906,6 +1203,22 @@ class _ClusterEngine:
         if self.monitor is not None:
             self.monitor.finish(end)
             slo = self.monitor.result()
+        chaos_stats = None
+        if self.chaos_on:
+            rec_times = [w["dt"] for w in self._watches if w["dt"] is not None]
+            chaos_stats = {
+                "crashes": self.crashes,
+                "stragglers": self.stragglers,
+                "link_degrades": self.link_degrades,
+                "displaced": self.n_displaced,
+                "lost_kv_tokens": self.lost_kv_tokens,
+                "re_prefill_tokens": self.re_prefill_tokens,
+                "restored_tokens": self.restored_tokens,
+                "stalls": self.stalls,
+                "recovery_s_mean": (sum(rec_times) / len(rec_times)
+                                    if rec_times else 0.0),
+                "recovery_s_max": max(rec_times) if rec_times else 0.0,
+            }
         return ClusterResult(
             mode=mode, records=records,
             replica_results=[rep.sim.res for rep in self.reps],
@@ -921,7 +1234,10 @@ class _ClusterEngine:
             shed=list(self.shed), retries=self.retries,
             cache_stats=(self.pcache.stats() if self.pcache is not None
                          else None),
-            slo=slo, t0=0.0, horizon=end)
+            slo=slo, t0=0.0, horizon=end,
+            requests_lost=self.requests_lost, chaos_stats=chaos_stats,
+            admission_stats=(self.door.stats() if self.door is not None
+                             else None))
 
     def _emit_trace(self, records, spans, end: float, mode: str) -> None:
         """Post-run trace emission: replica structural spans (billing
@@ -1059,6 +1375,23 @@ def summarize_cluster(cres: ClusterResult, *, slo_ttft: float | None = None,
     total = len(cres.records) + len(cres.shed)
     out["shed_frac"] = len(cres.shed) / total if total else 0.0
     out["retries"] = cres.retries
+    out["requests_lost"] = cres.requests_lost
+    if cres.chaos_stats is not None:
+        ch = cres.chaos_stats
+        out["chaos_crashes"] = ch["crashes"]
+        out["chaos_stragglers"] = ch["stragglers"]
+        out["chaos_link_degrades"] = ch["link_degrades"]
+        out["displaced"] = ch["displaced"]
+        out["re_prefill_tokens"] = ch["re_prefill_tokens"]
+        out["restored_tokens"] = ch["restored_tokens"]
+        out["recovery_s_mean"] = ch["recovery_s_mean"]
+        out["recovery_s_max"] = ch["recovery_s_max"]
+    if cres.admission_stats is not None:
+        ad = cres.admission_stats
+        out["door_admitted"] = ad["door_admitted"]
+        out["door_delayed"] = ad["door_delayed"]
+        out["door_shed"] = ad["door_shed"]
+        out["breaker_opens"] = ad["breaker_opens"]
     if cres.cache_stats is not None:
         cs = cres.cache_stats
         looked = cs["hits"] + cs["misses"]

@@ -159,7 +159,8 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
                   prefix_cache: PrefixCacheConfig | None = None,
                   cache_fracs: tuple | None = None,
                   cache_ttl: float | None = None,
-                  early_stop: bool = True) -> dict:
+                  early_stop: bool = True,
+                  loss_tolerance: int = 0) -> dict:
     """Sweep replica count / pool split at `qps`; return {"rows", "best"}.
 
     Every candidate serves the SAME request stream (`workload` regenerated
@@ -175,19 +176,31 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
     means more prefill skipped but less KV for live sequences, and the
     sweep finds where that trade clears the SLO cheapest. Alternatively
     `prefix_cache=` fixes one explicit config for all candidates; the
-    default (both None) keeps the legacy unconditional-discount model."""
+    default (both None) keeps the legacy unconditional-discount model.
+
+    `loss_tolerance=N` sizes for FAILURE instead of steady state: a
+    candidate is feasible only if, additionally, every fleet obtainable
+    by removing N replicas (the worst case over prefill/decode split
+    assignments for disaggregated fleets — an adversary kills where it
+    hurts most) still clears `attainment` on the same stream. A pool the
+    adversary can empty outright scores 0. The surviving-fleet goodput
+    lands on the row as `goodput_frac_loss` — the resilience margin the
+    chaos engine's correlated `node_failure` events then stress-test."""
+    if loss_tolerance < 0:
+        raise ValueError("loss_tolerance must be >= 0")
     sched = sched or SchedConfig()
     reqs = replace(workload, qps=qps).generate()
     cost_cache: dict = {}
     rows: list[dict] = []
+    goodput_memo: dict = {}
     if cache_fracs:  # empty/None both fall back to the single-config path
         cache_cfgs = [PrefixCacheConfig(budget_frac=float(f), ttl=cache_ttl)
                       for f in cache_fracs]
     else:
         cache_cfgs = [prefix_cache]  # may be None: legacy model
 
-    def candidate(mode: str, n_prefill: int, n_decode: int,
-                  pc: PrefixCacheConfig | None) -> dict:
+    def _build_spec(mode: str, n_prefill: int, n_decode: int,
+                    pc: PrefixCacheConfig | None) -> ClusterSpec:
         n = n_prefill + n_decode
         pools = (["mixed"] * n if mode == "colocated"
                  else ["prefill"] * n_prefill + ["decode"] * n_decode)
@@ -195,9 +208,46 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
             ReplicaSpec(hw=hw, tp=tp, prec=prec, pool=pool, sched=sched,
                         ctx_quantum=ctx_quantum, kv_block_tokens=kv_block_tokens)
             for pool in pools)
-        spec = ClusterSpec(replicas=replicas, router=router,
+        return ClusterSpec(replicas=replicas, router=router,
                            decode_router=decode_router, hit_frac=hit_frac,
                            prefix_cache=pc)
+
+    def _goodput_of(mode: str, n_prefill: int, n_decode: int,
+                    pc: PrefixCacheConfig | None) -> float:
+        """Goodput of one (reduced) fleet on the shared stream, memoized:
+        many candidates share the same surviving-fleet evaluations."""
+        key = (mode, n_prefill, n_decode, pc)
+        if key not in goodput_memo:
+            try:
+                cres = simulate_cluster(reqs, cfg,
+                                        _build_spec(mode, n_prefill,
+                                                    n_decode, pc),
+                                        _cost_cache=cost_cache)
+                s = summarize_cluster(cres, slo_ttft=slo_ttft,
+                                      slo_tpot=slo_tpot)
+                goodput_memo[key] = s["goodput_frac"]
+            except ValueError:
+                goodput_memo[key] = 0.0
+        return goodput_memo[key]
+
+    def _loss_goodput(mode: str, n_prefill: int, n_decode: int,
+                      pc: PrefixCacheConfig | None) -> float:
+        """Worst-case goodput after losing `loss_tolerance` replicas."""
+        n_loss = loss_tolerance
+        if mode == "colocated":
+            if n_decode - n_loss < 1:
+                return 0.0  # the loss empties the fleet
+            return _goodput_of(mode, 0, n_decode - n_loss, pc)
+        if n_prefill <= n_loss or n_decode <= n_loss:
+            return 0.0  # the adversary can empty one pool outright
+        return min(_goodput_of(mode, n_prefill - dp,
+                               n_decode - (n_loss - dp), pc)
+                   for dp in range(n_loss + 1))
+
+    def candidate(mode: str, n_prefill: int, n_decode: int,
+                  pc: PrefixCacheConfig | None) -> dict:
+        n = n_prefill + n_decode
+        spec = _build_spec(mode, n_prefill, n_decode, pc)
         row = {"mode": mode, "replicas": n,
                "prefill": n_prefill if mode == "disaggregated" else 0,
                "decode": n_decode if mode == "disaggregated" else 0,
@@ -220,6 +270,10 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
         if cres.cache_stats is not None:
             row["cache_hit_tokens"] = s["cache_hit_tokens"]
             row["cache_evictions"] = s["cache_evictions"]
+        if loss_tolerance > 0:
+            gl = _loss_goodput(mode, n_prefill, n_decode, pc)
+            row["goodput_frac_loss"] = gl
+            row["feasible"] = row["feasible"] and gl >= attainment
         return row
 
     for mode in modes:
@@ -239,4 +293,5 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
     feasible = [r for r in rows if r["feasible"]]
     best = min(feasible, key=lambda r: (r["cost_per_hr"], -r["goodput_frac"]),
                default=None)
-    return {"rows": rows, "best": best, "qps": qps, "attainment": attainment}
+    return {"rows": rows, "best": best, "qps": qps, "attainment": attainment,
+            "loss_tolerance": loss_tolerance}

@@ -21,6 +21,9 @@ finite budget with LRU + TTL eviction — see
 Routers are notified when a replica retires (`on_retire`): affinity
 drops the session pins homed on it and slo_debt drops its observation
 window, so long autoscaled runs don't accrete state for dead replicas.
+Chaos crashes (`repro.cluster.chaos`) flow through the same hook — a
+crashed replica is pruned exactly like a drained one, and its displaced
+requests re-enter `pick()` as fresh dispatches.
 
 `slo_debt` closes the loop on outcomes instead of state: the cluster
 engine feeds completed requests' TTFTs back via `observe()`, and the

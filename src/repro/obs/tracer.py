@@ -8,7 +8,9 @@ A `Tracer` collects three kinds of events while a simulation runs:
     replica structural phases (`provisioned`, `warmup`, `drain`).
   * **instants** — point events with attributes: dispatch/shed/retry
     decisions (with the router's explanation), autoscaler decisions (with
-    the policy's inputs), preemptions, cache invalidations.
+    the policy's inputs), preemptions, cache invalidations, and fault
+    injection (`replica.crash`, `chaos.straggler`, `chaos.link_degrade`,
+    `chaos.node_failure`, `request.stall` — see `repro.cluster.chaos`).
   * **counters** — numeric timelines sampled as the sim steps: queue
     depth, live batch slots, KV occupancy, cache-resident bytes,
     cumulative busy seconds.

@@ -15,6 +15,10 @@ W-second windows, burn-rate alerts). The single-replica sim emits
 request records after the run, so the monitor replays the recorded
 events in time order — same engine, same results as the cluster CLI's
 live monitor.
+
+`--slowdown F --slowdown-at T --slowdown-for D` injects a straggler
+window: engine iterations priced inside `[T, T + D)` are stretched by
+factor F (the single-replica view of the cluster CLI's `--chaos-stragglers`).
 """
 
 from __future__ import annotations
@@ -97,6 +101,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--sweep", default="2,4,8,16",
                    help="comma-separated slot counts for the pareto sweep ('' to skip)")
     p.add_argument("--ctx-quantum", type=int, default=16)
+    p.add_argument("--slowdown", type=float, default=None,
+                   help="straggler factor stretching engine iterations "
+                        "inside the injection window (>= 1)")
+    p.add_argument("--slowdown-at", type=float, default=0.0,
+                   help="straggler window start (s; with --slowdown)")
+    p.add_argument("--slowdown-for", type=float, default=10.0,
+                   help="straggler window duration (s; with --slowdown)")
     return p
 
 
@@ -155,7 +166,10 @@ def main(argv=None) -> None:
         if slos and level != "request":
             level = "request"
         tracer = make_tracer(level, counter_dt=args.trace_counter_dt)
-        s = summarize(simulate(reqs, cost, sc, tracer=tracer),
+        slowdown = ((args.slowdown, args.slowdown_at, args.slowdown_for)
+                    if args.slowdown is not None else None)
+        s = summarize(simulate(reqs, cost, sc, tracer=tracer,
+                               slowdown=slowdown),
                       slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
         if slos:
             mres = replay(tracer.meta, tracer.events, slos)
@@ -163,7 +177,9 @@ def main(argv=None) -> None:
                   f"time_in_violation={mres['time_in_violation']:g}s, "
                   f"alerts_fired={mres['alerts_fired']}, "
                   f"budget_burn={mres['budget_burn']:.1%}")
-        if tracer.enabled:
+        if tracer.enabled and args.trace:
+            # the SLO monitor can force the tracer on without
+            # --trace; only export when a path was actually given
             path = args.trace
             if len(policies) > 1:
                 root, ext = os.path.splitext(path)

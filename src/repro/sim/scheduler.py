@@ -179,6 +179,11 @@ class ReplicaSim:
         self._admit_seq = 0
         self._rids: set[int] = set()
         self._paged = getattr(cost, "kv_block_tokens", 0) > 0
+        # straggler window: iterations priced while `_slow_from <= now <
+        # _slow_until` are stretched by `_slow_factor` (chaos injection)
+        self._slow_factor = 1.0
+        self._slow_from = 0.0
+        self._slow_until = 0.0
         # static-batching state
         self._batch: list[_Run] = []
         self._spad = 0
@@ -233,6 +238,49 @@ class ReplicaSim:
         self._rids.add(req.rid)
         self._pending.append(_Run(req, rec, cached=cached, generated=generated))
         return rec
+
+    def set_slowdown(self, factor: float, until: float,
+                     *, start: float | None = None) -> None:
+        """Stretch every iteration priced inside `[start, until)` by
+        `factor` — a straggler: the replica keeps serving, just slower
+        (thermal throttling, a noisy neighbour, a flaky NIC). Takes
+        effect from the next priced iteration; an iteration already in
+        flight is not repriced. Overlapping windows merge to the worst
+        factor over their union."""
+        if factor < 1.0:
+            raise ValueError("slowdown factor must be >= 1.0")
+        start = self.now if start is None else start
+        if start < self._slow_until and until > self._slow_from:
+            factor = max(factor, self._slow_factor)
+            start = min(start, self._slow_from)
+            until = max(until, self._slow_until)
+        self._slow_factor, self._slow_from, self._slow_until = factor, start, until
+
+    def _slowed(self, t_iter: float) -> float:
+        if self._slow_from <= self.now < self._slow_until:
+            return t_iter * self._slow_factor
+        return t_iter
+
+    def kill(self) -> list[tuple[SimRequest, int, int, bool]]:
+        """Crash the replica: every unfinished request (queued, admitted,
+        mid-decode) loses its KV and is withdrawn as if never pushed here
+        — records of work in flight are removed, finished records
+        survive. Returns `(req, cached, generated, started)` per
+        withdrawn request, admitted work first, so the cluster can
+        re-dispatch the displaced stream (re-prefilling from scratch or
+        restoring from a surviving replica's prefix cache) and account
+        the lost tokens. Unlike `evict_pending` this is not graceful:
+        admitted work is abandoned too."""
+        out: list[tuple[SimRequest, int, int, bool]] = []
+        for r in self._running + self._batch + list(self._pending):
+            started = r.rec.admitted >= 0 or r.generated > 0
+            out.append((r.req, r.cached, r.generated, started))
+            self.res.records.remove(r.rec)
+            self._rids.discard(r.req.rid)
+        self._pending.clear()
+        self._running.clear()
+        self._batch = []
+        return out
 
     def evict_pending(self, *, include_staged: bool = False) -> list[SimRequest]:
         """Remove and return queued requests that were never admitted (no
@@ -354,7 +402,7 @@ class ReplicaSim:
         B = len(batch)
         s_pad = max(r.req.prompt for r in batch)
         t_admit = self.now
-        t_iter = self.cost.prefill_time(s_pad, ctx_end=s_pad, batch=B)
+        t_iter = self._slowed(self.cost.prefill_time(s_pad, ctx_end=s_pad, batch=B))
         self.now += t_iter
         self.res.iterations += 1
         self.res.busy_s += t_iter
@@ -368,6 +416,7 @@ class ReplicaSim:
             r.cached = s_pad
             if r.req.output <= 1:
                 r.rec.finish = self.now
+                self._rids.discard(r.req.rid)
                 done.append(r.rec)
         if all(r.generated >= r.req.output for r in batch):
             if self._tr_rep:
@@ -385,7 +434,7 @@ class ReplicaSim:
         batch = self._batch
         B = len(batch)
         self._k += 1
-        t_iter = self.cost.decode_step_time(B, self._spad + self._k)
+        t_iter = self._slowed(self.cost.decode_step_time(B, self._spad + self._k))
         self.now += t_iter
         self.res.iterations += 1
         self.res.decode_steps += 1
@@ -397,6 +446,7 @@ class ReplicaSim:
                 r.generated += 1
                 if r.generated >= r.req.output:
                     r.rec.finish = self.now
+                    self._rids.discard(r.req.rid)
                     done.append(r.rec)
         self._note_kv([r.cached for r in batch])
         if all(r.generated >= r.req.output for r in batch):
@@ -497,6 +547,7 @@ class ReplicaSim:
             res.decode_steps += 1
         if t_iter == 0.0 and not pending and not running:
             return []
+        t_iter = self._slowed(t_iter)
         self.now += t_iter
         res.iterations += 1
         res.busy_s += t_iter
@@ -515,6 +566,7 @@ class ReplicaSim:
                 if r.done:
                     r.rec.finish = self.now
                     running.remove(r)
+                    self._rids.discard(r.req.rid)
                     done.append(r.rec)
         if res.iterations > _MAX_ITERATIONS:
             raise RuntimeError("simulation did not converge (check token_budget/kv)")
@@ -541,10 +593,17 @@ def emit_record_spans(tracer, records, track: str = "") -> None:
 
 
 def simulate(requests: list[SimRequest], cost: ServingCostModel,
-             sc: SchedConfig | None = None, *, tracer=None) -> SimResult:
-    """Run one replica to completion over a whole request list."""
+             sc: SchedConfig | None = None, *, tracer=None,
+             slowdown: tuple[float, float, float] | None = None) -> SimResult:
+    """Run one replica to completion over a whole request list.
+    `slowdown=(factor, start, duration)` injects a straggler window —
+    iterations priced inside `[start, start + duration)` are stretched by
+    `factor` (see `ReplicaSim.set_slowdown`)."""
     tracer = tracer if tracer is not None else NULL_TRACER
     sim = ReplicaSim(cost, sc, tracer=tracer)
+    if slowdown is not None:
+        factor, start, duration = slowdown
+        sim.set_slowdown(factor, start + duration, start=start)
     for r in sorted(requests, key=lambda r: (r.arrival, r.rid)):
         sim.push(r)
     sim.run()
