@@ -35,6 +35,7 @@ def _suites() -> dict:
     from benchmarks.paper_tables import ALL
     from benchmarks.roofline import bench_roofline
     from benchmarks.serving_bench import bench_serving
+    from benchmarks.sim_speed_bench import bench_sim_speed
 
     suites = dict(ALL)
     suites["roofline"] = bench_roofline
@@ -42,6 +43,7 @@ def _suites() -> dict:
     suites["serving"] = bench_serving
     suites["cluster"] = bench_cluster
     suites["autoscale"] = bench_autoscale
+    suites["sim_speed"] = bench_sim_speed
     return suites
 
 

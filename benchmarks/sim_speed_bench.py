@@ -1,0 +1,193 @@
+"""Simulation-speed suite: sim-steps/second for both engine cores.
+
+Pins the fleet-simulation hot path so speedups (and regressions) are
+measurable, not vibes. Each size runs the same diurnal trace through
+`simulate_cluster` and reports wall time, total scheduler iterations,
+and steps/second:
+
+  * small  —    8 replicas,   2k requests: both engines; this is the CI
+    gate config (fast enough to run on every push).
+  * medium —  100 replicas,  20k requests: both engines.
+  * large  — 1000 replicas, 10⁶ requests: the ROADMAP item-3 target
+    ("1000-replica, 10⁶-request diurnal traces in minutes"). The
+    vectorized engine runs the full trace; the reference engine's
+    steps/second is measured on a truncated stream (its per-step cost is
+    dominated by O(replicas) candidate scans, so the rate is independent
+    of trace length — running all 10⁶ requests through it takes hours
+    and measures nothing new).
+
+CLI (also wired into `python -m benchmarks.run sim_speed` at small size):
+
+    PYTHONPATH=src python -m benchmarks.sim_speed_bench --sizes small \
+        --json BENCH_sim_speed.json --gate benchmarks/sim_speed_baseline.json
+
+`--gate` compares the vectorized engine's steps/second against a
+checked-in baseline and exits nonzero on a >30% regression (tunable via
+`--regression-frac`); `--update-baseline` refreshes the baseline file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+from repro.configs import get_config
+from repro.sim import LengthDist, SchedConfig, Workload
+from repro.cluster import ClusterSpec, ReplicaSpec, simulate_cluster
+
+# per-size: fleet size, request count per engine (None = skip the engine)
+SIZES = {
+    "small": dict(replicas=8, requests={"vectorized": 2_000,
+                                        "reference": 2_000}),
+    "medium": dict(replicas=100, requests={"vectorized": 20_000,
+                                           "reference": 20_000}),
+    "large": dict(replicas=1_000, requests={"vectorized": 1_000_000,
+                                            "reference": 50_000}),
+}
+GATE_ENGINE = "vectorized"
+GATE_SIZE = "small"
+
+
+def _workload(replicas: int, requests: int) -> list:
+    return Workload(
+        name="sim-speed", qps=replicas * 6.0, num_requests=requests,
+        arrival="diurnal",
+        prompt=LengthDist("lognormal", 96, 0.4, lo=8, hi=512),
+        output=LengthDist("lognormal", 48, 0.4, lo=4, hi=256),
+        seed=1).generate()
+
+
+def _fleet(replicas: int) -> ClusterSpec:
+    return ClusterSpec(replicas=tuple(
+        ReplicaSpec(pool="mixed", sched=SchedConfig(slots=16), ctx_quantum=32)
+        for _ in range(replicas)))
+
+
+def run_size(size: str, engines=None) -> dict:
+    """Run one size; returns {engine: {wall_s, iterations, steps_per_s,
+    replicas, requests, completed}}."""
+    conf = SIZES[size]
+    out: dict = {}
+    for engine, n in conf["requests"].items():
+        if engines is not None and engine not in engines:
+            continue
+        reqs = _workload(conf["replicas"], n)
+        spec = _fleet(conf["replicas"])
+        t0 = time.perf_counter()
+        cres = simulate_cluster(reqs, get_config("qwen3_14b"), spec,
+                                engine=engine)
+        wall = time.perf_counter() - t0
+        iters = sum(r.iterations for r in cres.replica_results)
+        out[engine] = {
+            "replicas": conf["replicas"], "requests": n,
+            "completed": len(cres.records), "wall_s": round(wall, 3),
+            "iterations": iters,
+            "steps_per_s": round(iters / wall, 1),
+        }
+    return out
+
+
+def bench_sim_speed():
+    """`benchmarks.run` suite entry: the small config on both engines,
+    harness row convention (name, us_per_call, derived)."""
+    rows = []
+    res = run_size(GATE_SIZE)
+    for engine, r in res.items():
+        rows.append((
+            f"sim_speed/{GATE_SIZE}-{engine}",
+            r["wall_s"] * 1e6,
+            f"steps_per_s={r['steps_per_s']:.0f};iters={r['iterations']}"
+            f";replicas={r['replicas']};requests={r['requests']}",
+        ))
+    if len(res) == 2:
+        speedup = (res["vectorized"]["steps_per_s"]
+                   / res["reference"]["steps_per_s"])
+        rows.append((f"sim_speed/{GATE_SIZE}-speedup", 0.0,
+                     f"vectorized_over_reference={speedup:.2f}x"))
+    return rows
+
+
+def check_gate(results: dict, baseline_path: str, frac: float) -> list[str]:
+    """Compare vectorized steps/s against the checked-in baseline;
+    returns a list of failure messages (empty = pass)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    fails = []
+    for size, engines in results.items():
+        want = base.get("sizes", {}).get(size, {}).get(GATE_ENGINE)
+        got = engines.get(GATE_ENGINE)
+        if not want or not got:
+            continue
+        floor = want["steps_per_s"] * (1.0 - frac)
+        if got["steps_per_s"] < floor:
+            fails.append(
+                f"sim_speed regression [{size}/{GATE_ENGINE}]: "
+                f"{got['steps_per_s']:.0f} steps/s < floor {floor:.0f} "
+                f"(baseline {want['steps_per_s']:.0f}, "
+                f"allowed -{frac:.0%})")
+    return fails
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(prog="python -m benchmarks.sim_speed_bench",
+                                description=__doc__)
+    p.add_argument("--sizes", default="small",
+                   help=f"comma-separated sizes from {sorted(SIZES)}")
+    p.add_argument("--engines", default=None,
+                   help="restrict to these engines (comma-separated)")
+    p.add_argument("--json", default="BENCH_sim_speed.json", dest="json_path",
+                   help="write results here ('' to skip)")
+    p.add_argument("--gate", default=None,
+                   help="baseline JSON to gate against (fail on regression)")
+    p.add_argument("--regression-frac", type=float, default=0.30,
+                   help="allowed steps/s drop vs baseline before failing")
+    p.add_argument("--update-baseline", default=None,
+                   help="write/refresh this baseline JSON from the run")
+    args = p.parse_args(argv)
+
+    sizes = [s.strip() for s in args.sizes.split(",") if s.strip()]
+    engines = ([e.strip() for e in args.engines.split(",") if e.strip()]
+               if args.engines else None)
+    results: dict = {}
+    for size in sizes:
+        if size not in SIZES:
+            raise SystemExit(f"unknown size {size!r}; choose from "
+                             f"{sorted(SIZES)}")
+        results[size] = run_size(size, engines)
+        for engine, r in results[size].items():
+            print(f"{size:>6} {engine:<11} R={r['replicas']:<5} "
+                  f"N={r['requests']:<8} {r['wall_s']:>8.2f}s  "
+                  f"iters={r['iterations']:<9} "
+                  f"{r['steps_per_s']:>10,.0f} steps/s")
+        both = results[size]
+        if "vectorized" in both and "reference" in both:
+            ratio = (both["vectorized"]["steps_per_s"]
+                     / both["reference"]["steps_per_s"])
+            print(f"{size:>6} speedup     vectorized/reference = {ratio:.2f}x")
+
+    payload = {"bench": "sim_speed", "platform": platform.platform(),
+               "python": platform.python_version(), "sizes": results}
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json_path}")
+    if args.update_baseline:
+        with open(args.update_baseline, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# baseline updated: {args.update_baseline}")
+    if args.gate:
+        fails = check_gate(results, args.gate, args.regression_frac)
+        for msg in fails:
+            print(msg)
+        if fails:
+            raise SystemExit(1)
+        print(f"# gate ok (>= {1 - args.regression_frac:.0%} of baseline "
+              f"steps/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -100,6 +100,25 @@ python -m repro.cluster --config qwen3_14b --hw h100 --qps 16 --requests 16 \
     --slots 4 --ctx-quantum 32 --plan --plan-max-replicas 3 --plan-loss 1
 python examples/chaos_resilience.py > /dev/null
 
+# engine-core smokes: both entry points must run end-to-end on either
+# simulation core (the vectorized fast path and the reference event loop),
+# and the parallel planner sweep must work in worker processes
+for eng in vectorized reference; do
+    python -m repro.sim --config qwen3_14b --hw h100 --qps 16 --requests 12 \
+        --slots 4 --sweep '' --ctx-quantum 32 --engine "$eng" > /dev/null
+    python -m repro.cluster --config qwen3_14b --hw h100 --replicas 2 \
+        --qps 16 --requests 12 --slots 4 --ctx-quantum 32 \
+        --engine "$eng" > /dev/null
+done
+python -m repro.cluster --config qwen3_14b --hw h100 --qps 16 --requests 16 \
+    --slots 4 --ctx-quantum 32 --plan --plan-max-replicas 2 \
+    --sweep-workers 2 > /dev/null
+
+# sim-speed regression gate: the vectorized engine's steps/second on the
+# small config must stay within 30% of the checked-in baseline
+python -m benchmarks.sim_speed_bench --sizes small \
+    --json "$TRACE_DIR/sim_speed.json" --gate benchmarks/sim_speed_baseline.json
+
 # docs: the generated CLI reference must match the parsers; links resolve
 python scripts/gen_cli_docs.py --check
 python scripts/check_docs.py

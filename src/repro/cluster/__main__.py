@@ -63,7 +63,7 @@ from dataclasses import replace
 
 from repro.configs import get_config
 from repro.obs import LEVELS, SLOMonitor, make_slos, make_tracer, write_trace
-from repro.sim import ADMISSIONS, LengthDist, SchedConfig, Workload
+from repro.sim import ADMISSIONS, ENGINES, LengthDist, SchedConfig, Workload
 from repro.cluster import (
     ADMISSION_POLICIES,
     AUTOSCALE_POLICIES,
@@ -178,6 +178,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--plan-cache-fracs", default=None,
                    help="comma-separated cache budget shares to sweep as a "
                         "capacity dimension of --plan (e.g. 0.05,0.1,0.2)")
+    p.add_argument("--sweep-workers", type=int, default=0,
+                   help="--plan: evaluate each fleet size's candidates in "
+                        "this many parallel processes (-1 = all cores, "
+                        "0/1 = serial; identical rows either way)")
+    p.add_argument("--engine", default="vectorized", choices=list(ENGINES),
+                   help="simulation core: the vectorized fast path or the "
+                        "reference event loop (identical results)")
     p.add_argument("--attainment", type=float, default=0.95)
     # dynamic fleet
     p.add_argument("--autoscale", action="store_true",
@@ -378,7 +385,8 @@ def main(argv=None) -> None:
             max_replicas=args.plan_max_replicas,
             prefix_cache=None if cache_fracs else pcache,
             cache_fracs=cache_fracs, cache_ttl=args.cache_ttl,
-            loss_tolerance=args.plan_loss)
+            loss_tolerance=args.plan_loss, engine=args.engine,
+            sweep_workers=args.sweep_workers)
         print(f"# capacity plan: {cfg.name} @ {args.qps:g} qps, "
               f"SLO ttft<={args.slo_ttft:g}s tpot<={args.slo_tpot:g}s, "
               f"attainment>={args.attainment:.0%}"
@@ -468,7 +476,8 @@ def main(argv=None) -> None:
                              "the live SLO monitor")
         try:
             cres = simulate_cluster(reqs, cfg, spec, autoscale=autoscale,
-                                    tracer=tracer, monitor=monitor)
+                                    tracer=tracer, monitor=monitor,
+                                    engine=args.engine)
         except ValueError as e:
             print(f"{mode:<14} (skipped: {e})")
             continue

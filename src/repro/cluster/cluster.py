@@ -76,6 +76,7 @@ same SLO vocabulary at replica, pool, and cluster level.
 
 from __future__ import annotations
 
+import bisect
 import heapq
 from collections import deque
 from dataclasses import dataclass, field, replace
@@ -88,7 +89,14 @@ from repro.core.hardware import HardwareSpec, NetLevel, get_hardware
 from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.sim.costmodel import ServingCostModel
 from repro.sim.metrics import summarize_records
-from repro.sim.scheduler import ReplicaSim, ReqRecord, SchedConfig, SimResult
+from repro.sim.scheduler import (
+    ENGINES,
+    ReplicaSim,
+    ReqRecord,
+    SchedConfig,
+    SimResult,
+    make_replica_sim,
+)
 from repro.sim.workload import SimRequest
 
 from repro.cluster.autoscale import AutoscaleConfig, Autoscaler
@@ -103,7 +111,20 @@ from repro.cluster.prefixcache import (
     PrefixCacheConfig,
     prefix_key,
 )
-from repro.cluster.router import AffinityRouter, ReplicaView, make_router
+from repro.cluster.router import (
+    AffinityRouter,
+    JoinShortestQueueRouter,
+    LeastKVLoadRouter,
+    ReplicaView,
+    RoundRobinRouter,
+    make_router,
+)
+
+# routers whose pick is a pure (depth, kv) argmin over the eligible set:
+# the vectorized engine computes it from its O(1) per-replica counters
+# instead of materializing `ReplicaView` snapshots (affinity and slo_debt
+# read per-request / windowed state and keep the view-based path)
+_FAST_ROUTERS = (JoinShortestQueueRouter, RoundRobinRouter, LeastKVLoadRouter)
 
 POOLS = ("mixed", "prefill", "decode")
 _INF = float("inf")
@@ -374,10 +395,12 @@ class _ClusterEngine:
 
     def __init__(self, spec: ClusterSpec, cfg: ModelConfig,
                  autoscale: AutoscaleConfig | dict | None, cache: dict,
-                 tracer=None, monitor=None):
+                 tracer=None, monitor=None, engine: str = "vectorized"):
         self.spec = spec
         self.cfg = cfg
         self.cache = cache
+        self.engine = engine
+        self._vec = engine == "vectorized"
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.monitor = monitor
         if monitor is not None:
@@ -405,6 +428,21 @@ class _ClusterEngine:
             self.pcache = FleetPrefixCache(spec.prefix_cache, spec.hit_frac)
             if isinstance(self.router, AffinityRouter):
                 self.router.bind_cache(self.pcache)
+
+        # vectorized-engine bookkeeping. A traced run must interleave
+        # per-iteration events across replicas exactly as the reference
+        # loop does, so tracing forces single-step advances (the batched
+        # loop stays on, but every chunk is one iteration).
+        self._lockstep = self._vec and self.tracer.enabled
+        self._rheap: list[tuple[float, int]] = []  # (clock, idx), lazy
+        self._pheap: list[tuple[float, int]] = []  # prefill-pool subset
+        self._use_pheap = self._vec and self.disagg and not self._lockstep
+        self._hbuf: list = []  # (start, idx, seq, recs) harvest buffer
+        self._hseq = 0
+        self._depth: list[int] = []  # queued + live, per replica
+        self._members: dict[str, list[int]] = {}  # pool -> accepting idxs
+        self._warming: dict[str, list[tuple[float, int]]] = {}
+        self._draining: set[int] = set()  # drain started, not yet retired
 
         self.reps: list[_Rep] = []
         for rs in spec.replicas:
@@ -512,12 +550,100 @@ class _ClusterEngine:
                         f"(replica budget {full / 1e9:.2f} GB)")
                 sched = replace(sched, kv_capacity=seq_cap)
             self.pcache.register(len(self.reps), budget, cost)
-        rep = _Rep(sim=ReplicaSim(cost, sched,
-                                  name=f"r{len(self.reps)}:{pool}",
-                                  tracer=self.tracer),
+        rep = _Rep(sim=make_replica_sim(cost, sched, engine=self.engine,
+                                        name=f"r{len(self.reps)}:{pool}",
+                                        tracer=self.tracer),
                    spec=rs, cost=cost, pool=pool, started=started, ready=ready)
+        idx = len(self.reps)
         self.reps.append(rep)
+        self._depth.append(0)
+        if ready <= started:
+            bisect.insort(self._members.setdefault(pool, []), idx)
+        else:
+            heapq.heappush(self._warming.setdefault(pool, []), (ready, idx))
         return rep
+
+    def _promote(self, pool: str, t: float) -> None:
+        """Move replicas whose warmup has elapsed by `t` from the warming
+        heap into the pool's accepting set (cancelled/crashed ones are
+        skipped lazily — they stopped being provisioned while warming)."""
+        wh = self._warming.get(pool)
+        if not wh:
+            return
+        lst = self._members.setdefault(pool, [])
+        while wh and wh[0][0] <= t:
+            _, i = heapq.heappop(wh)
+            if self.reps[i].provisioned:
+                bisect.insort(lst, i)
+
+    def _member_remove(self, i: int) -> None:
+        lst = self._members.get(self.reps[i].pool)
+        if lst:
+            k = bisect.bisect_left(lst, i)
+            if k < len(lst) and lst[k] == i:
+                del lst[k]
+
+    def _push_req(self, i: int, staged: SimRequest, *, cached: int = 0,
+                  generated: int = 0) -> ReqRecord:
+        """Push one request onto replica `i`, keeping the engine's O(1)
+        depth counter current and waking the replica in the vectorized
+        advance heap if it was idle (a working replica already has a live
+        heap entry at its current clock)."""
+        sim = self.reps[i].sim
+        idle = not sim.has_work
+        rec = sim.push(staged, cached=cached, generated=generated)
+        self._depth[i] += 1
+        if self._vec and idle:
+            heapq.heappush(self._rheap, (sim.now, i))
+            if self._use_pheap and self.reps[i].pool == "prefill":
+                heapq.heappush(self._pheap, (sim.now, i))
+        return rec
+
+    def _pick_fast(self, router, elig: list[int]) -> tuple[int, int]:
+        """`router.pick` over the eligible set without building views:
+        identical argmin (depth, kv, idx) semantics from the engine's own
+        counters. Only called for `_FAST_ROUTERS` policies."""
+        depth = self._depth
+        reps = self.reps
+        if type(router) is JoinShortestQueueRouter:
+            # depth 0 means no outstanding work, hence kv_used == 0.0:
+            # the first idle index is the exact (depth, kv, idx) argmin,
+            # so a lightly loaded fleet picks in O(1) instead of O(fleet)
+            best = -1
+            bd = -1
+            for i in elig:
+                d = depth[i]
+                if d == 0:
+                    best, bd = i, 0
+                    break
+                if bd < 0 or d < bd:
+                    bd = d
+            if best < 0:
+                bkv = 0.0  # kv_used only breaks depth ties
+                for i in elig:
+                    if depth[i] == bd:
+                        kv = reps[i].sim.kv_used
+                        if best < 0 or kv < bkv:
+                            best, bkv = i, kv
+            router.last_pick = {"router": router.name, "depth": bd}
+            return best, 0
+        if type(router) is RoundRobinRouter:
+            i = elig[router._i % len(elig)]
+            router._i += 1
+            router.last_pick = {"router": router.name, "slot": router._i - 1}
+            return i, 0
+        # LeastKVLoadRouter
+        best = -1
+        bkey = None
+        for i in elig:
+            sim = reps[i].sim
+            frac = sim.kv_used / sim.cap if sim.cap > 0 else 0.0
+            key = (frac, depth[i])
+            if bkey is None or key < bkey:
+                best, bkey = i, key
+        router.last_pick = {"router": router.name, "kv_frac": bkey[0],
+                            "depth": bkey[1]}
+        return best, 0
 
     def _spawn(self, pool: str, t: float) -> None:
         tmpls = self._templates[pool]
@@ -558,6 +684,8 @@ class _ClusterEngine:
     def _drain(self, i: int, t: float) -> None:
         rep = self.reps[i]
         rep.drain_start = t
+        self._member_remove(i)
+        self._draining.add(i)
         self.scale_events.append(
             {"t": t, "action": "drain", "replica": i, "pool": rep.pool})
         if self._tr_sum:
@@ -580,7 +708,9 @@ class _ClusterEngine:
             # the re-route pays a second p2p hop and re-enters the punctual
             # transfer queue (the decode router picks the target when the
             # KV lands, so mid-stream pool changes are tolerated)
-            for req in rep.sim.evict_pending(include_staged=True):
+            evicted = rep.sim.evict_pending(include_staged=True)
+            self._depth[i] -= len(evicted)
+            for req in evicted:
                 orig = self.orig[req.rid]
                 nbytes = rep.cost.kv_handoff_bytes(orig.prompt)
                 dt = self._xfer_dt(nbytes, t)
@@ -593,7 +723,9 @@ class _ClusterEngine:
                     self._handoff_log.setdefault(orig.rid, []).append(
                         (t, t + dt, nbytes))
             return
-        for req in rep.sim.evict_pending():
+        evicted = rep.sim.evict_pending()
+        self._depth[i] -= len(evicted)
+        for req in evicted:
             # stage requests (disagg prefill pushes output=1) map back to
             # the original arrival before re-routing
             self._dispatch(self.orig[req.rid], t, attempt=0)
@@ -798,6 +930,9 @@ class _ClusterEngine:
         displaced = rep.sim.kill()
         rep.retired = t
         rep.crashed = True
+        self._member_remove(i)
+        self._draining.discard(i)
+        self._depth[i] = 0
         self.crashes += 1
         self.scale_events.append(
             {"t": t, "action": "crash", "replica": i, "pool": rep.pool})
@@ -839,17 +974,23 @@ class _ClusterEngine:
             prev = self._counted.pop(req.rid, None)
             if prev is not None:
                 self.pcache.uncount(*prev)
-        elig = [i for i, r in enumerate(self.reps)
-                if r.pool == self.arrival_pool and r.accepting(t)]
+        if self._vec:
+            self._promote(self.arrival_pool, t)
+            elig = self._members.get(self.arrival_pool) or []
+        else:
+            elig = [i for i, r in enumerate(self.reps)
+                    if r.pool == self.arrival_pool and r.accepting(t)]
         if not elig:
             # zero accepting replicas (all warming/draining during an
             # aggressive scale-down, or killed by chaos): park and retry
             # instead of crashing on the empty pool
             self._stall(req, t, attempt)
             return
-        views = _views(self.reps, elig, at=t)
-        if (self.spec.shed_depth is not None
-                and min(v.depth for v in views) >= self.spec.shed_depth):
+        fast = self._vec and type(self.router) in _FAST_ROUTERS
+        views = None if fast else _views(self.reps, elig, at=t)
+        if self.spec.shed_depth is not None and (
+                min(self._depth[i] for i in elig) if fast
+                else min(v.depth for v in views)) >= self.spec.shed_depth:
             if attempt < self.spec.max_retries:
                 self.retries += 1
                 retry_at = t + self._retry_delay(attempt)
@@ -869,7 +1010,8 @@ class _ClusterEngine:
                         "request.drop" if attempt > 0 else "request.shed",
                         t, rid=req.rid, reason="queue_full", attempts=attempt)
             return
-        i, cached = self.router.pick(req, views)
+        i, cached = (self._pick_fast(self.router, elig) if fast
+                     else self.router.pick(req, views))
         if self.pcache is not None:
             # modeled residency overrides any router-side discount: the
             # lookup counts the hit, then reserves this request's own
@@ -899,15 +1041,19 @@ class _ClusterEngine:
         # back onto the original arrival so TTFT keeps the backoff paid
         staged = replace(req, arrival=t, output=1) if self.disagg \
             else replace(req, arrival=t)
-        rec = self.reps[i].sim.push(staged, cached=cached)
+        rec = self._push_req(i, staged, cached=cached)
         if self.disagg:
             # prefill stage ends at the first token; decode happens elsewhere
             self.prefill_recs[req.rid] = rec
         self.assignments[req.rid] = [i, -1]
 
     def _dispatch_xfer(self, ready: float, req: SimRequest) -> None:
-        elig = [i for i, r in enumerate(self.reps)
-                if r.pool == "decode" and r.accepting(ready)]
+        if self._vec:
+            self._promote("decode", ready)
+            elig = self._members.get("decode") or []
+        else:
+            elig = [i for i, r in enumerate(self.reps)
+                    if r.pool == "decode" and r.accepting(ready)]
         if not elig:
             # the KV landed but no decode replica can take it (all
             # warming, or killed by chaos): park the transfer until one
@@ -923,9 +1069,12 @@ class _ClusterEngine:
             else:
                 self._lose(req, ready, reason="no_capacity")
             return
-        j, _ = self.d_router.pick(req, _views(self.reps, elig, at=ready))
-        self.decode_recs[req.rid] = self.reps[j].sim.push(
-            replace(req, arrival=ready), cached=req.prompt, generated=1)
+        if self._vec and type(self.d_router) in _FAST_ROUTERS:
+            j, _ = self._pick_fast(self.d_router, elig)
+        else:
+            j, _ = self.d_router.pick(req, _views(self.reps, elig, at=ready))
+        self.decode_recs[req.rid] = self._push_req(
+            j, replace(req, arrival=ready), cached=req.prompt, generated=1)
         self.assignments[req.rid][1] = j
 
     # --------------------------------------------------------------- advance
@@ -1031,9 +1180,16 @@ class _ClusterEngine:
                             e2e=rec.finish - orig.arrival)
 
     def _check_drained(self) -> None:
-        for i, rep in enumerate(self.reps):
+        # `_draining` holds exactly the drain-started, not-yet-retired
+        # indices, so this is O(active drains) per event — not O(fleet) —
+        # and visiting it in index order matches the reference full scan.
+        if not self._draining:
+            return
+        for i in sorted(self._draining):
+            rep = self.reps[i]
             if rep.draining and rep.retired < 0 and not rep.sim.has_work:
                 rep.retired = max(rep.sim.now, rep.drain_start)
+                self._draining.discard(i)
                 self._on_retired(i)
                 if self._tr_sum:
                     self.tracer.instant("replica.retired", rep.retired,
@@ -1052,7 +1208,13 @@ class _ClusterEngine:
         advance's intermediate targets — advancing to t' then t equals
         advancing straight to t — which is what lets autoscaler control
         ticks observe the fleet without perturbing the schedule (the
-        pinned-bounds parity contract)."""
+        pinned-bounds parity contract).
+
+        The vectorized engine reproduces this exact merge without the
+        per-step O(replicas) candidate scan — see `_advance_all_vec`."""
+        if self._vec:
+            self._advance_all_vec(t)
+            return
         while True:
             t_sub = min(t, self.xfers[0][0]) if self.xfers else t
             cands = [(rep.sim.now, i) for i, rep in enumerate(self.reps)
@@ -1068,8 +1230,110 @@ class _ClusterEngine:
             break
         self._check_drained()
 
+    def _rheap_top(self) -> tuple[float, int] | None:
+        """Least (clock, idx) replica that still has work, or None. Stale
+        entries (the replica stepped, finished, or was killed since the
+        push) are discarded lazily; every working replica always owns one
+        live entry at exactly its current clock."""
+        h = self._rheap
+        while h:
+            c, i = h[0]
+            sim = self.reps[i].sim
+            if sim.has_work and sim.now == c:
+                return h[0]
+            heapq.heappop(h)
+        return None
+
+    def _pheap_top(self, skip: int) -> float:
+        """Least clock among the prefill replicas with work, excluding
+        `skip` (the replica about to advance; its entry is dropped here
+        and re-pushed after the chunk). Bounds how far any replica may
+        batch ahead: a new KV handoff's ready time can only be created at
+        or after this clock."""
+        h = self._pheap
+        while h:
+            c, i = h[0]
+            sim = self.reps[i].sim
+            if i == skip or not (sim.has_work and sim.now == c):
+                heapq.heappop(h)
+                continue
+            return c
+        return _INF
+
+    def _flush_hbuf(self, bound: tuple[float, int] | None) -> None:
+        """Harvest buffered completion batches in global (step start,
+        replica idx) order — the exact order the reference loop's merge
+        harvests them in — up to (not including) `bound`. `None` flushes
+        everything."""
+        hb = self._hbuf
+        while hb and (bound is None or (hb[0][0], hb[0][1]) < bound):
+            _, i, _, recs = heapq.heappop(hb)
+            self._depth[i] -= len(recs)
+            self._harvest(i, recs)
+
+    def _advance_all_vec(self, t: float) -> None:
+        """`_advance_all`, batched: replicas advance in multi-iteration
+        chunks instead of one globally-merged step at a time, and
+        completions buffer in `_hbuf` until every step that the reference
+        merge orders before them has run. Chunk caps keep the merge
+        exact:
+
+          * `t_sub` (next handoff ready): same sub-target as the
+            reference loop.
+          * the least prefill-pool clock: a NEW handoff's ready time is
+            `completion + dt`, so it can only appear at or after that
+            clock — no other replica may batch past it. Prefill replicas
+            additionally stop at their own completions (`stop_on_done`),
+            re-evaluating caps once the handoff is on the heap.
+          * equal clocks fall back to single steps, preserving the
+            reference tie order (idx).
+
+        Colocated fleets have no handoffs: every working replica advances
+        straight to `t` in one chunk and the buffer is drained sorted."""
+        reps = self.reps
+        heap = self._rheap
+        while True:
+            top = self._rheap_top()
+            self._flush_hbuf(top)
+            # flushed harvests may have pushed new handoffs: re-read
+            t_x = self.xfers[0][0] if self.xfers else _INF
+            t_sub = t if t <= t_x else t_x
+            if top is None or top[0] >= t_sub:
+                if self.xfers and t_x <= t:
+                    ready, _, req = heapq.heappop(self.xfers)
+                    self._dispatch_xfer(ready, req)
+                    continue
+                break
+            c1, i = heapq.heappop(heap)
+            rep = reps[i]
+            sim = rep.sim
+            stop_done = False
+            if self._lockstep:
+                cap, single = t_sub, True
+            elif not self.disagg:
+                cap, single = t, False  # no handoffs: t_sub == t
+            else:
+                if rep.pool == "prefill":
+                    stop_done = True
+                c_p = self._pheap_top(i)
+                cap = min(t_sub, c_p)
+                single = cap <= c1
+                if single:
+                    cap = t_sub
+            for start, recs in sim.advance_chunk(cap, single=single,
+                                                 stop_on_done=stop_done):
+                heapq.heappush(self._hbuf, (start, i, self._hseq, recs))
+                self._hseq += 1
+            if sim.has_work:
+                heapq.heappush(heap, (sim.now, i))
+                if self._use_pheap and rep.pool == "prefill":
+                    heapq.heappush(self._pheap, (sim.now, i))
+        self._check_drained()
+
     @property
     def _sim_work(self) -> bool:
+        if self._vec:
+            return self._rheap_top() is not None
         return any(r.sim.has_work for r in self.reps)
 
     # -------------------------------------------------------------- main loop
@@ -1290,7 +1554,7 @@ class _ClusterEngine:
 def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
                      spec: ClusterSpec, *,
                      autoscale: AutoscaleConfig | dict | None = None,
-                     tracer=None, monitor=None,
+                     tracer=None, monitor=None, engine: str = "vectorized",
                      _cost_cache: dict | None = None) -> ClusterResult:
     """Co-simulate the cluster over one shared arrival stream.
 
@@ -1312,6 +1576,13 @@ def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
         tracer: a `repro.obs.Tracer` to record the run (None = untraced;
             tracing is purely observational and never changes the
             schedule — also regression-tested).
+        engine: `"vectorized"` (default) advances replicas in batched
+            multi-iteration chunks with struct-of-arrays replica state;
+            `"reference"` is the original one-globally-merged-step-at-a-
+            time loop. Both produce the same schedule (differentially
+            tested, see `tests/test_engine_parity.py`); the reference
+            engine exists as the oracle for that harness and as a
+            fallback while debugging.
         monitor: a `repro.obs.SLOMonitor` to evaluate SLO compliance,
             burn-rate alerts, and anomaly detection ONLINE as the run
             executes. Attached as a tracer sink (a sink-only tracer is
@@ -1326,6 +1597,8 @@ def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
         stage results, billing spans (seconds), and scale events.
     """
     spec.validate()
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
     if isinstance(autoscale, AutoscaleConfig):
         autoscale.validate()
         if spec.disaggregated and autoscale.max_replicas < 2:
@@ -1345,9 +1618,10 @@ def simulate_cluster(requests: list[SimRequest], cfg: ModelConfig,
                     f"got {type(asc).__name__} for pool {pool!r}")
             asc.validate()
     cache = _cost_cache if _cost_cache is not None else {}
-    engine = _ClusterEngine(spec, cfg, autoscale, cache, tracer, monitor)
-    engine.run(sorted(requests, key=lambda r: (r.arrival, r.rid)))
-    return engine.result()
+    eng = _ClusterEngine(spec, cfg, autoscale, cache, tracer, monitor,
+                         engine=engine)
+    eng.run(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+    return eng.result()
 
 
 # ------------------------------------------------------------------ metrics

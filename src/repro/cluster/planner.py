@@ -15,6 +15,8 @@ ratio, not their absolute level.
 
 from __future__ import annotations
 
+import os
+from concurrent.futures import ProcessPoolExecutor
 from dataclasses import replace
 
 from repro.configs.base import ModelConfig
@@ -147,6 +149,129 @@ def seed_predictive(asc: AutoscaleConfig, workload: Workload,
                    mean_output=float(mean_output))
 
 
+# ------------------------------------------------------------ sweep internals
+# Candidate evaluation lives at module level (not in closures) so the same
+# code runs serially and inside `ProcessPoolExecutor` workers. Workers
+# receive the sweep context once via the pool initializer (fork + one
+# pickle per worker, not one per task) and keep their own cost-model /
+# goodput memos — memo hits then land per worker instead of globally,
+# which costs some duplicated loss-tolerance evaluations but changes no
+# row (every simulation is deterministic in its inputs).
+_PLAN_CTX: dict | None = None
+
+
+def _plan_init(ctx: dict) -> None:
+    global _PLAN_CTX
+    ctx = dict(ctx)
+    ctx["cost_cache"] = {}
+    ctx["goodput_memo"] = {}
+    _PLAN_CTX = ctx
+
+
+def _plan_spec(ctx: dict, mode: str, n_prefill: int, n_decode: int,
+               pc: PrefixCacheConfig | None) -> ClusterSpec:
+    n = n_prefill + n_decode
+    pools = (["mixed"] * n if mode == "colocated"
+             else ["prefill"] * n_prefill + ["decode"] * n_decode)
+    replicas = tuple(
+        ReplicaSpec(hw=ctx["hw"], tp=ctx["tp"], prec=ctx["prec"], pool=pool,
+                    sched=ctx["sched"], ctx_quantum=ctx["ctx_quantum"],
+                    kv_block_tokens=ctx["kv_block_tokens"])
+        for pool in pools)
+    return ClusterSpec(replicas=replicas, router=ctx["router"],
+                       decode_router=ctx["decode_router"],
+                       hit_frac=ctx["hit_frac"], prefix_cache=pc)
+
+
+def _plan_goodput(ctx: dict, mode: str, n_prefill: int, n_decode: int,
+                  pc: PrefixCacheConfig | None) -> float:
+    """Goodput of one (reduced) fleet on the shared stream, memoized:
+    many candidates share the same surviving-fleet evaluations."""
+    memo = ctx["goodput_memo"]
+    key = (mode, n_prefill, n_decode, pc)
+    if key not in memo:
+        try:
+            cres = simulate_cluster(ctx["reqs"], ctx["cfg"],
+                                    _plan_spec(ctx, mode, n_prefill,
+                                               n_decode, pc),
+                                    engine=ctx["engine"],
+                                    _cost_cache=ctx["cost_cache"])
+            s = summarize_cluster(cres, slo_ttft=ctx["slo_ttft"],
+                                  slo_tpot=ctx["slo_tpot"])
+            memo[key] = s["goodput_frac"]
+        except ValueError:
+            memo[key] = 0.0
+    return memo[key]
+
+
+def _plan_loss_goodput(ctx: dict, mode: str, n_prefill: int, n_decode: int,
+                       pc: PrefixCacheConfig | None) -> float:
+    """Worst-case goodput after losing `loss_tolerance` replicas."""
+    n_loss = ctx["loss_tolerance"]
+    if mode == "colocated":
+        if n_decode - n_loss < 1:
+            return 0.0  # the loss empties the fleet
+        return _plan_goodput(ctx, mode, 0, n_decode - n_loss, pc)
+    if n_prefill <= n_loss or n_decode <= n_loss:
+        return 0.0  # the adversary can empty one pool outright
+    return min(_plan_goodput(ctx, mode, n_prefill - dp,
+                             n_decode - (n_loss - dp), pc)
+               for dp in range(n_loss + 1))
+
+
+def _plan_candidate(ctx: dict, mode: str, n_prefill: int, n_decode: int,
+                    pc: PrefixCacheConfig | None) -> dict:
+    n = n_prefill + n_decode
+    spec = _plan_spec(ctx, mode, n_prefill, n_decode, pc)
+    row = {"mode": mode, "replicas": n,
+           "prefill": n_prefill if mode == "disaggregated" else 0,
+           "decode": n_decode if mode == "disaggregated" else 0,
+           "cache_frac": (None if pc is None or pc.budget_bytes is not None
+                          else pc.budget_frac),
+           "cost_per_hr": cluster_price_per_hr(spec, ctx["price_table"])}
+    try:
+        cres = simulate_cluster(ctx["reqs"], ctx["cfg"], spec,
+                                engine=ctx["engine"],
+                                _cost_cache=ctx["cost_cache"])
+    except ValueError as e:  # e.g. model KV footprint exceeds a pool budget
+        row.update(feasible=False, error=str(e), goodput_frac=0.0)
+        return row
+    s = summarize_cluster(cres, slo_ttft=ctx["slo_ttft"],
+                          slo_tpot=ctx["slo_tpot"])
+    row.update(
+        goodput_frac=s["goodput_frac"], goodput_rps=s["goodput_rps"],
+        ttft_p95=s["ttft_p95"], tpot_p95=s["tpot_p95"],
+        tokens_per_s=s["tokens_per_s"], xfer_share=s["xfer_share"],
+        preemptions=s["preemptions"],
+        util_mean=sum(s["replica_util"]) / len(s["replica_util"]),
+        feasible=s["goodput_frac"] >= ctx["attainment"])
+    if cres.cache_stats is not None:
+        row["cache_hit_tokens"] = s["cache_hit_tokens"]
+        row["cache_evictions"] = s["cache_evictions"]
+    if ctx["loss_tolerance"] > 0:
+        gl = _plan_loss_goodput(ctx, mode, n_prefill, n_decode, pc)
+        row["goodput_frac_loss"] = gl
+        row["feasible"] = row["feasible"] and gl >= ctx["attainment"]
+    return row
+
+
+def _plan_eval(task: tuple) -> dict:
+    return _plan_candidate(_PLAN_CTX, *task)
+
+
+def _plan_pool(ctx: dict, workers: int) -> ProcessPoolExecutor | None:
+    """Fork-based worker pool, or None when unavailable (serial fallback).
+    Fork is required so workers inherit the imported modules cheaply; the
+    context is shipped once per worker through the initializer."""
+    try:
+        import multiprocessing as mp
+        return ProcessPoolExecutor(max_workers=workers,
+                                   mp_context=mp.get_context("fork"),
+                                   initializer=_plan_init, initargs=(ctx,))
+    except (ValueError, OSError):
+        return None
+
+
 def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
                   slo_ttft: float, slo_tpot: float, attainment: float = 0.95,
                   hw: str = "h100", tp: int = 1, prec: int = 2,
@@ -160,7 +285,9 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
                   cache_fracs: tuple | None = None,
                   cache_ttl: float | None = None,
                   early_stop: bool = True,
-                  loss_tolerance: int = 0) -> dict:
+                  loss_tolerance: int = 0,
+                  engine: str = "vectorized",
+                  sweep_workers: int = 0) -> dict:
     """Sweep replica count / pool split at `qps`; return {"rows", "best"}.
 
     Every candidate serves the SAME request stream (`workload` regenerated
@@ -185,110 +312,53 @@ def plan_capacity(cfg: ModelConfig, workload: Workload, *, qps: float,
     hurts most) still clears `attainment` on the same stream. A pool the
     adversary can empty outright scores 0. The surviving-fleet goodput
     lands on the row as `goodput_frac_loss` — the resilience margin the
-    chaos engine's correlated `node_failure` events then stress-test."""
+    chaos engine's correlated `node_failure` events then stress-test.
+
+    `engine` selects the replica-simulation core for every candidate run
+    (see `simulate_cluster`). `sweep_workers` > 1 evaluates each fleet
+    size's candidate batch in parallel OS processes (fork; `-1` means all
+    cores): rows, their order, and `early_stop` behavior are identical to
+    the serial sweep — per-`n` batches are the early-stop granularity in
+    both — because every candidate simulation is deterministic."""
     if loss_tolerance < 0:
         raise ValueError("loss_tolerance must be >= 0")
     sched = sched or SchedConfig()
     reqs = replace(workload, qps=qps).generate()
-    cost_cache: dict = {}
     rows: list[dict] = []
-    goodput_memo: dict = {}
     if cache_fracs:  # empty/None both fall back to the single-config path
         cache_cfgs = [PrefixCacheConfig(budget_frac=float(f), ttl=cache_ttl)
                       for f in cache_fracs]
     else:
         cache_cfgs = [prefix_cache]  # may be None: legacy model
 
-    def _build_spec(mode: str, n_prefill: int, n_decode: int,
-                    pc: PrefixCacheConfig | None) -> ClusterSpec:
-        n = n_prefill + n_decode
-        pools = (["mixed"] * n if mode == "colocated"
-                 else ["prefill"] * n_prefill + ["decode"] * n_decode)
-        replicas = tuple(
-            ReplicaSpec(hw=hw, tp=tp, prec=prec, pool=pool, sched=sched,
-                        ctx_quantum=ctx_quantum, kv_block_tokens=kv_block_tokens)
-            for pool in pools)
-        return ClusterSpec(replicas=replicas, router=router,
-                           decode_router=decode_router, hit_frac=hit_frac,
-                           prefix_cache=pc)
-
-    def _goodput_of(mode: str, n_prefill: int, n_decode: int,
-                    pc: PrefixCacheConfig | None) -> float:
-        """Goodput of one (reduced) fleet on the shared stream, memoized:
-        many candidates share the same surviving-fleet evaluations."""
-        key = (mode, n_prefill, n_decode, pc)
-        if key not in goodput_memo:
-            try:
-                cres = simulate_cluster(reqs, cfg,
-                                        _build_spec(mode, n_prefill,
-                                                    n_decode, pc),
-                                        _cost_cache=cost_cache)
-                s = summarize_cluster(cres, slo_ttft=slo_ttft,
-                                      slo_tpot=slo_tpot)
-                goodput_memo[key] = s["goodput_frac"]
-            except ValueError:
-                goodput_memo[key] = 0.0
-        return goodput_memo[key]
-
-    def _loss_goodput(mode: str, n_prefill: int, n_decode: int,
-                      pc: PrefixCacheConfig | None) -> float:
-        """Worst-case goodput after losing `loss_tolerance` replicas."""
-        n_loss = loss_tolerance
-        if mode == "colocated":
-            if n_decode - n_loss < 1:
-                return 0.0  # the loss empties the fleet
-            return _goodput_of(mode, 0, n_decode - n_loss, pc)
-        if n_prefill <= n_loss or n_decode <= n_loss:
-            return 0.0  # the adversary can empty one pool outright
-        return min(_goodput_of(mode, n_prefill - dp,
-                               n_decode - (n_loss - dp), pc)
-                   for dp in range(n_loss + 1))
-
-    def candidate(mode: str, n_prefill: int, n_decode: int,
-                  pc: PrefixCacheConfig | None) -> dict:
-        n = n_prefill + n_decode
-        spec = _build_spec(mode, n_prefill, n_decode, pc)
-        row = {"mode": mode, "replicas": n,
-               "prefill": n_prefill if mode == "disaggregated" else 0,
-               "decode": n_decode if mode == "disaggregated" else 0,
-               "cache_frac": (None if pc is None or pc.budget_bytes is not None
-                              else pc.budget_frac),
-               "cost_per_hr": cluster_price_per_hr(spec, price_table)}
-        try:
-            cres = simulate_cluster(reqs, cfg, spec, _cost_cache=cost_cache)
-        except ValueError as e:  # e.g. model KV footprint exceeds a pool budget
-            row.update(feasible=False, error=str(e), goodput_frac=0.0)
-            return row
-        s = summarize_cluster(cres, slo_ttft=slo_ttft, slo_tpot=slo_tpot)
-        row.update(
-            goodput_frac=s["goodput_frac"], goodput_rps=s["goodput_rps"],
-            ttft_p95=s["ttft_p95"], tpot_p95=s["tpot_p95"],
-            tokens_per_s=s["tokens_per_s"], xfer_share=s["xfer_share"],
-            preemptions=s["preemptions"],
-            util_mean=sum(s["replica_util"]) / len(s["replica_util"]),
-            feasible=s["goodput_frac"] >= attainment)
-        if cres.cache_stats is not None:
-            row["cache_hit_tokens"] = s["cache_hit_tokens"]
-            row["cache_evictions"] = s["cache_evictions"]
-        if loss_tolerance > 0:
-            gl = _loss_goodput(mode, n_prefill, n_decode, pc)
-            row["goodput_frac_loss"] = gl
-            row["feasible"] = row["feasible"] and gl >= attainment
-        return row
-
-    for mode in modes:
-        lo = max(min_replicas, 2) if mode == "disaggregated" else min_replicas
-        for n in range(lo, max_replicas + 1):
-            splits = ([(p, n - p) for p in range(1, n)]
-                      if mode == "disaggregated" else [(0, n)])
-            feasible_here = False
-            for n_p, n_d in splits:
-                for pc in cache_cfgs:
-                    row = candidate(mode, n_p, n_d, pc)
-                    rows.append(row)
-                    feasible_here |= row["feasible"]
-            if feasible_here and early_stop:
-                break
+    base_ctx = dict(cfg=cfg, reqs=reqs, sched=sched, hw=hw, tp=tp, prec=prec,
+                    router=router, decode_router=decode_router,
+                    hit_frac=hit_frac, kv_block_tokens=kv_block_tokens,
+                    ctx_quantum=ctx_quantum, slo_ttft=slo_ttft,
+                    slo_tpot=slo_tpot, attainment=attainment,
+                    price_table=price_table, loss_tolerance=loss_tolerance,
+                    engine=engine)
+    ctx = dict(base_ctx, cost_cache={}, goodput_memo={})
+    workers = os.cpu_count() or 1 if sweep_workers < 0 else sweep_workers
+    pool = _plan_pool(base_ctx, workers) if workers > 1 else None
+    try:
+        for mode in modes:
+            lo = max(min_replicas, 2) if mode == "disaggregated" else min_replicas
+            for n in range(lo, max_replicas + 1):
+                splits = ([(p, n - p) for p in range(1, n)]
+                          if mode == "disaggregated" else [(0, n)])
+                tasks = [(mode, n_p, n_d, pc)
+                         for n_p, n_d in splits for pc in cache_cfgs]
+                if pool is not None:
+                    batch = list(pool.map(_plan_eval, tasks))
+                else:
+                    batch = [_plan_candidate(ctx, *t) for t in tasks]
+                rows.extend(batch)
+                if early_stop and any(r["feasible"] for r in batch):
+                    break
+    finally:
+        if pool is not None:
+            pool.shutdown()
 
     feasible = [r for r in rows if r["feasible"]]
     best = min(feasible, key=lambda r: (r["cost_per_hr"], -r["goodput_frac"]),

@@ -33,18 +33,21 @@ from repro.sim.costmodel import ServingCostModel
 from repro.sim.metrics import dominates, pareto_sweep, summarize, summarize_records
 from repro.sim.scheduler import (
     ADMISSIONS,
+    ENGINES,
     POLICIES,
     ReplicaSim,
     ReqRecord,
     SchedConfig,
     SimResult,
     emit_record_spans,
+    make_replica_sim,
     simulate,
 )
 from repro.sim.workload import LengthDist, SimRequest, Workload, to_engine_requests
 
 __all__ = [
     "ADMISSIONS",
+    "ENGINES",
     "LengthDist",
     "POLICIES",
     "ReplicaSim",
@@ -55,6 +58,7 @@ __all__ = [
     "SimResult",
     "Workload",
     "dominates",
+    "make_replica_sim",
     "emit_record_spans",
     "pareto_sweep",
     "simulate",

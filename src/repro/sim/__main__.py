@@ -31,6 +31,7 @@ from repro.core.hardware import get_hardware
 from repro.obs import LEVELS, make_slos, make_tracer, replay, write_trace
 from repro.sim import (
     ADMISSIONS,
+    ENGINES,
     LengthDist,
     POLICIES,
     SchedConfig,
@@ -108,6 +109,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="straggler window start (s; with --slowdown)")
     p.add_argument("--slowdown-for", type=float, default=10.0,
                    help="straggler window duration (s; with --slowdown)")
+    p.add_argument("--engine", default="vectorized", choices=list(ENGINES),
+                   help="simulation core: the vectorized fast path or the "
+                        "reference event loop (identical results)")
     return p
 
 
@@ -169,7 +173,7 @@ def main(argv=None) -> None:
         slowdown = ((args.slowdown, args.slowdown_at, args.slowdown_for)
                     if args.slowdown is not None else None)
         s = summarize(simulate(reqs, cost, sc, tracer=tracer,
-                               slowdown=slowdown),
+                               slowdown=slowdown, engine=args.engine),
                       slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
         if slos:
             mres = replay(tracer.meta, tracer.events, slos)

@@ -56,6 +56,10 @@ from repro.sim.workload import SimRequest
 
 POLICIES = ("static", "continuous", "chunked")
 ADMISSIONS = ("fcfs", "edf")
+# engine implementations: "vectorized" is the struct-of-arrays fast core
+# (repro.sim.engine_vec), "reference" the original object-per-request loop
+# kept for differential testing. Both execute the identical schedule.
+ENGINES = ("vectorized", "reference")
 
 _MAX_ITERATIONS = 5_000_000  # runaway guard
 
@@ -208,10 +212,9 @@ class ReplicaSim:
                    for r in self._running + self._batch)
 
     # ---------------------------------------------------------------- enqueue
-    def push(self, req: SimRequest, *, cached: int = 0, generated: int = 0) -> ReqRecord:
-        """Enqueue a request. `cached`/`generated` pre-materialize KV state:
-        a prefix-cache hit enters with `cached < prompt`, a disaggregated
-        decode handoff with `cached == prompt, generated == 1`."""
+    def _check_push(self, req: SimRequest, cached: int, generated: int) -> None:
+        """Admission-time validation shared by both engine implementations
+        (the error messages are part of the contract parity tests pin)."""
         if req.rid in self._rids:
             raise ValueError(f"duplicate rid {req.rid}")
         if req.prompt < 1 or req.output < 1:
@@ -233,6 +236,12 @@ class ReplicaSim:
             raise ValueError(
                 "static batching cannot enter mid-stream (pre-materialized "
                 "cached/generated KV state); use continuous or chunked")
+
+    def push(self, req: SimRequest, *, cached: int = 0, generated: int = 0) -> ReqRecord:
+        """Enqueue a request. `cached`/`generated` pre-materialize KV state:
+        a prefix-cache hit enters with `cached < prompt`, a disaggregated
+        decode handoff with `cached == prompt, generated == 1`."""
+        self._check_push(req, cached, generated)
         rec = ReqRecord(req.rid, req.arrival, req.prompt, req.output)
         self.res.records.append(rec)
         self._rids.add(req.rid)
@@ -330,6 +339,27 @@ class ReplicaSim:
         out: list[ReqRecord] = []
         while self.has_work:
             out += self.step()
+        return out
+
+    def advance_chunk(self, t_limit: float, *, single: bool = False,
+                      stop_on_done: bool = False,
+                      ) -> list[tuple[float, list[ReqRecord]]]:
+        """`run_until` that reports each completing iteration's start
+        clock — the batched cluster loop's merge key (see
+        `repro.sim.engine_vec.VecReplicaSim.advance_chunk` for the
+        accelerated override and the flag semantics). This base version
+        steps one iteration at a time, so a reference (or static-policy)
+        replica can participate in a vectorized fleet unchanged."""
+        out: list[tuple[float, list[ReqRecord]]] = []
+        while self.has_work and self.now < t_limit:
+            start = self.now
+            done = self.step()
+            if done:
+                out.append((start, done))
+                if stop_on_done:
+                    break
+            if single:
+                break
         return out
 
     # ---------------------------------------------------------------- helpers
@@ -592,15 +622,34 @@ def emit_record_spans(tracer, records, track: str = "") -> None:
                            ttft=rec.ttft, tpot=rec.tpot, e2e=rec.e2e)
 
 
+def make_replica_sim(cost: ServingCostModel, sc: SchedConfig | None = None,
+                     *, engine: str = "vectorized", name: str = "",
+                     tracer=None) -> ReplicaSim:
+    """Instantiate a replica simulation under the chosen engine. The
+    vectorized core covers continuous/chunked scheduling; static batching
+    (a cold path — whole-batch admission, no mid-stream entry) always runs
+    on the reference engine, which is exact by construction."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    policy = (sc or SchedConfig()).policy
+    if engine == "vectorized" and policy != "static":
+        from repro.sim.engine_vec import VecReplicaSim  # local: avoid cycle
+        return VecReplicaSim(cost, sc, name=name, tracer=tracer)
+    return ReplicaSim(cost, sc, name=name, tracer=tracer)
+
+
 def simulate(requests: list[SimRequest], cost: ServingCostModel,
              sc: SchedConfig | None = None, *, tracer=None,
-             slowdown: tuple[float, float, float] | None = None) -> SimResult:
+             slowdown: tuple[float, float, float] | None = None,
+             engine: str = "vectorized") -> SimResult:
     """Run one replica to completion over a whole request list.
     `slowdown=(factor, start, duration)` injects a straggler window —
     iterations priced inside `[start, start + duration)` are stretched by
-    `factor` (see `ReplicaSim.set_slowdown`)."""
+    `factor` (see `ReplicaSim.set_slowdown`). `engine` selects the
+    vectorized fast core or the reference loop (identical results; see
+    docs/performance.md for the parity contract)."""
     tracer = tracer if tracer is not None else NULL_TRACER
-    sim = ReplicaSim(cost, sc, tracer=tracer)
+    sim = make_replica_sim(cost, sc, engine=engine, tracer=tracer)
     if slowdown is not None:
         factor, start, duration = slowdown
         sim.set_slowdown(factor, start + duration, start=start)

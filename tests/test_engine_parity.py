@@ -1,0 +1,214 @@
+"""Differential parity: `engine="vectorized"` against `engine="reference"`.
+
+The vectorized engine is a performance refactor, not a remodel: for every
+supported configuration it must reproduce the reference event loop's
+output. These tests drive the same workload through both engines and
+compare summaries, per-request records, dispatch assignments,
+per-replica results, and — when traced — the full event stream.
+
+Everything is compared with `==`, i.e. **bit-for-bit**. No float
+tolerance is used anywhere, deliberately: the vectorized fast paths are
+restricted to transformations whose float-operation order is identical
+to the reference loop's (`np.cumsum` over step durations matches
+sequential `now += dt` additions; the scalar small-window path performs
+those same additions directly; batched fleet advances split chunks at
+exactly the event boundaries the reference merge observes), so even
+accumulated clocks reproduce to the last ulp. A tolerance here would
+only mask a semantic divergence, which is precisely what this harness
+exists to catch.
+"""
+
+from dataclasses import asdict
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.hardware import H100_SXM
+from repro.sim import (
+    ENGINES,
+    LengthDist,
+    SchedConfig,
+    ServingCostModel,
+    Workload,
+    simulate,
+)
+from repro.cluster import (
+    AutoscaleConfig,
+    ChaosConfig,
+    ClusterSpec,
+    PrefixCacheConfig,
+    ReplicaSpec,
+    simulate_cluster,
+    summarize_cluster,
+)
+from repro.cluster.chaos import AdmissionConfig
+from repro.obs import Tracer
+
+CFG = get_config("qwen3_14b")
+COST = ServingCostModel(CFG, H100_SXM, ctx_quantum=32)
+
+
+def _wl(**kw):
+    base = dict(
+        qps=60.0, num_requests=36, arrival="poisson",
+        prompt=LengthDist("lognormal", 96, 0.4, lo=8, hi=512),
+        output=LengthDist("lognormal", 24, 0.4, lo=2, hi=128), seed=0,
+    )
+    base.update(kw)
+    return Workload(**base).generate()
+
+
+def _spec(pools, *, sched=None, router="jsq", **kw):
+    sched = sched or SchedConfig(slots=8)
+    return ClusterSpec(
+        replicas=tuple(ReplicaSpec(pool=p, sched=sched, ctx_quantum=32)
+                       for p in pools),
+        router=router, **kw)
+
+
+def _tight(reqs, factor=3.0, **kw):
+    cap = factor * max(COST.kv_bytes(r.prompt + r.output) for r in reqs)
+    return SchedConfig(slots=8, kv_capacity=cap, **kw)
+
+
+def _run_both(reqs, spec, *, autoscale=None, traced=False):
+    """Run the identical configuration under each engine and return the
+    comparable artifacts keyed by engine name."""
+    out = {}
+    for eng in ENGINES:
+        tracer = Tracer("replica") if traced else None
+        cres = simulate_cluster(reqs, CFG, spec, autoscale=autoscale,
+                                engine=eng, tracer=tracer)
+        out[eng] = {
+            "summary": summarize_cluster(cres, slo_ttft=1.0, slo_tpot=0.1),
+            "assignments": cres.assignments,
+            "records": [asdict(r) for r in cres.records],
+            "replicas": [(r.iterations, r.decode_steps, r.peak_kv, r.busy_s,
+                          r.preemptions, r.peak_kv_waste, r.admit_order)
+                         for r in cres.replica_results],
+            "trace": tracer.events if traced else None,
+        }
+    return out
+
+
+def _assert_identical(out):
+    vec, ref = out["vectorized"], out["reference"]
+    for part in ("summary", "assignments", "records", "replicas", "trace"):
+        assert vec[part] == ref[part], f"engines diverge in {part}"
+
+
+# ------------------------------------------------------------ the full matrix
+# colocated/disagg x static/autoscaled x chaos on/off x prefix-cache on/off
+# x traced/untraced: every cell must be bit-identical across engines.
+_POOLS = {"colocated": ["mixed"] * 3,
+          "disagg": ["prefill", "prefill", "decode"]}
+
+
+@pytest.mark.parametrize("traced", [False, True], ids=["untraced", "traced"])
+@pytest.mark.parametrize("pcache", [False, True], ids=["nocache", "pcache"])
+@pytest.mark.parametrize("chaos", [False, True], ids=["calm", "chaos"])
+@pytest.mark.parametrize("scaled", [False, True], ids=["static", "autoscaled"])
+@pytest.mark.parametrize("mode", ["colocated", "disagg"])
+def test_engine_parity_matrix(mode, scaled, chaos, pcache, traced):
+    kw = {}
+    if chaos:
+        kw["chaos"] = ChaosConfig(seed=5, horizon=40.0, crash_rate=0.06,
+                                  straggler_rate=0.1, link_rate=0.05)
+    if pcache:
+        # shared-prefix sessions + affinity routing make the cache do work
+        kw["router"] = "affinity"
+        kw["prefix_cache"] = PrefixCacheConfig(budget_frac=0.05)
+        reqs = _wl(num_sessions=6)
+    else:
+        reqs = _wl()
+    autoscale = None
+    if scaled:
+        autoscale = AutoscaleConfig(policy="rate", min_replicas=2,
+                                    max_replicas=6, interval=2.0)
+    out = _run_both(reqs, _spec(_POOLS[mode], **kw),
+                    autoscale=autoscale, traced=traced)
+    _assert_identical(out)
+
+
+# --------------------------------------------------- policy/router edge cover
+# Configurations that stress specific fast paths in the vectorized engine:
+# each router's tie-breaking, KV-pressure preemption, shed+retry, the
+# admission front door, EDF ordering under chunked prefill.
+def _case(name, reqs, spec, autoscale=None):
+    return pytest.param(reqs, spec, autoscale, id=name)
+
+
+def _edge_cases():
+    reqs = _wl()
+    hot = _wl(qps=300.0, num_requests=48)
+    sess = _wl(num_sessions=6)
+    return [
+        _case("router-rr", reqs, _spec(["mixed"] * 3, router="round_robin")),
+        _case("router-leastkv-tightkv", reqs,
+              _spec(["mixed"] * 3, sched=_tight(reqs), router="least_kv")),
+        _case("router-affinity", sess, _spec(["mixed"] * 3, router="affinity")),
+        _case("router-slodebt", reqs, _spec(["mixed"] * 3, router="slo_debt")),
+        _case("edf-chunked", reqs,
+              _spec(["mixed"] * 3, sched=SchedConfig(
+                  slots=8, policy="chunked", token_budget=128,
+                  admission="edf"))),
+        _case("disagg-tightkv", reqs,
+              _spec(["prefill", "decode", "decode"], sched=_tight(reqs, 2.5))),
+        _case("shed-retry", hot,
+              _spec(["mixed"] * 2, sched=_tight(reqs), shed_depth=6)),
+        _case("admission-door", hot,
+              _spec(["mixed"] * 2, admission=AdmissionConfig(
+                  rate=30.0, burst=10, queue_depth=8))),
+        _case("pool-autoscale", _wl(qps=40.0, num_requests=48),
+              _spec(["prefill", "decode"]),
+              {"prefill": AutoscaleConfig(policy="rate", min_replicas=1,
+                                          max_replicas=4, interval=2.0),
+               "decode": AutoscaleConfig(policy="kv_tpot", min_replicas=1,
+                                         max_replicas=4, interval=3.0)}),
+    ]
+
+
+@pytest.mark.parametrize("reqs,spec,autoscale", _edge_cases())
+def test_engine_parity_edges(reqs, spec, autoscale):
+    _assert_identical(_run_both(reqs, spec, autoscale=autoscale))
+
+
+# ----------------------------------------------------- single-replica engine
+@pytest.mark.parametrize("policy", ["continuous", "chunked"])
+def test_simulate_engine_parity(policy):
+    reqs = _wl(num_requests=48, qps=100.0)
+    sc = SchedConfig(policy=policy, slots=8, token_budget=192)
+    vec = simulate(reqs, COST, sc, engine="vectorized")
+    ref = simulate(reqs, COST, sc, engine="reference")
+    assert [asdict(r) for r in vec.records] == [asdict(r) for r in ref.records]
+    assert (vec.iterations, vec.decode_steps, vec.peak_kv, vec.busy_s,
+            vec.preemptions, vec.admit_order) == \
+        (ref.iterations, ref.decode_steps, ref.peak_kv, ref.busy_s,
+         ref.preemptions, ref.admit_order)
+
+
+def test_simulate_engine_parity_straggler_window():
+    reqs = _wl(num_requests=32, qps=100.0)
+    vec = simulate(reqs, COST, SchedConfig(slots=8), engine="vectorized",
+                   slowdown=(3.0, 0.1, 0.5))
+    ref = simulate(reqs, COST, SchedConfig(slots=8), engine="reference",
+                   slowdown=(3.0, 0.1, 0.5))
+    assert [asdict(r) for r in vec.records] == [asdict(r) for r in ref.records]
+
+
+def test_static_policy_falls_back_to_reference():
+    # static batching is a cold path: both engine names must agree because
+    # the factory maps them to the same exact implementation
+    reqs = _wl(num_requests=24)
+    sc = SchedConfig(policy="static", slots=8)
+    vec = simulate(reqs, COST, sc, engine="vectorized")
+    ref = simulate(reqs, COST, sc, engine="reference")
+    assert [asdict(r) for r in vec.records] == [asdict(r) for r in ref.records]
+
+
+def test_unknown_engine_rejected():
+    reqs = _wl(num_requests=4)
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate(reqs, COST, SchedConfig(), engine="warp")
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate_cluster(reqs, CFG, _spec(["mixed"]), engine="warp")

@@ -1,0 +1,71 @@
+"""Scale-tier properties of the vectorized engine (slow tier).
+
+Fleet-scale runs are exactly where a vectorized refactor can go subtly
+wrong — a dropped wake-up, a double-harvest, a KV ledger that drifts
+under autoscale churn and crashes. Differential parity (see
+`test_engine_parity.py`) pins small configurations bit-for-bit against
+the reference engine; these tests pin the *invariants* at sizes where
+running the reference oracle would be too slow, across multiple seeds:
+
+  * conservation — every generated request is accounted for exactly
+    once: completed + shed + lost == generated, with no duplicate
+    completions;
+  * KV capacity — no replica's peak KV ledger ever exceeds its budget;
+  * causality — per-record timestamps stay ordered.
+"""
+
+import pytest
+
+from repro.configs import get_config
+from repro.sim import LengthDist, SchedConfig, Workload
+from repro.cluster import (
+    AutoscaleConfig,
+    ChaosConfig,
+    ClusterSpec,
+    ReplicaSpec,
+    simulate_cluster,
+    summarize_cluster,
+)
+
+CFG = get_config("qwen3_14b")
+REPLICAS = 200
+REQUESTS = 100_000
+
+
+def _fleet_run(seed: int):
+    reqs = Workload(
+        qps=REPLICAS * 6.0, num_requests=REQUESTS, arrival="diurnal",
+        prompt=LengthDist("lognormal", 96, 0.4, lo=8, hi=512),
+        output=LengthDist("lognormal", 48, 0.4, lo=4, hi=256),
+        seed=seed).generate()
+    spec = ClusterSpec(
+        replicas=tuple(
+            ReplicaSpec(pool="mixed", sched=SchedConfig(slots=16),
+                        ctx_quantum=32)
+            for _ in range(REPLICAS)),
+        chaos=ChaosConfig(seed=seed, horizon=30.0, crash_rate=0.02,
+                          straggler_rate=0.05))
+    autoscale = AutoscaleConfig(policy="rate", min_replicas=REPLICAS // 2,
+                                max_replicas=REPLICAS, interval=5.0)
+    cres = simulate_cluster(reqs, CFG, spec, autoscale=autoscale,
+                            engine="vectorized")
+    return reqs, cres
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_fleet_scale_conservation_and_kv(seed):
+    reqs, cres = _fleet_run(seed)
+    # conservation: exactly-once accounting over the full request set
+    done = [r.rid for r in cres.records]
+    assert len(done) == len(set(done)), "request completed twice"
+    assert len(done) + len(cres.shed) + cres.requests_lost == len(reqs)
+    # KV-capacity invariant per replica, including crashed/drained ones
+    for rep in cres.replica_results:
+        assert rep.peak_kv <= rep.kv_capacity
+    # causality on every completed record
+    for r in cres.records:
+        assert r.finish >= r.first_token >= r.admitted >= r.arrival
+    # the summary must roll up without error at this size
+    s = summarize_cluster(cres, slo_ttft=1.0, slo_tpot=0.1)
+    assert s["iterations"] > REQUESTS  # at least one step per request
