@@ -14,14 +14,10 @@ from repro.core.hardware import (
     H100_SXM,
     H200,
     HardwareSpec,
-    MemLevel,
     NDR_IB,
-    NetLevel,
-    NVLINK3,
     NVLINK4,
     NVS5_NET,
     NVS_NET,
-    TB,
 )
 from repro.core.memory import training_memory
 from repro.core.paper_data import (

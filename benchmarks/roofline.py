@@ -19,7 +19,7 @@ import glob
 import json
 import os
 
-from repro.configs import ALIASES, SHAPES, get_config
+from repro.configs import SHAPES, get_config
 from repro.core.cellcost import cell_cost
 from repro.models.transformer import Model
 

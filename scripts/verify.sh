@@ -8,6 +8,15 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# static gates first: the contract linter (exit 1 on any finding not in
+# lint_baseline.json — see docs/linting.md) and, when installed, ruff
+python -m repro.lint --check
+if command -v ruff > /dev/null 2>&1; then
+    ruff check .
+else
+    echo "WARNING: ruff not installed; skipping (CI runs it — see requirements-dev.txt)"
+fi
+
 python -m pytest -x -q --durations=15
 python -m benchmarks.run serving cluster autoscale
 

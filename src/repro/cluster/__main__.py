@@ -85,6 +85,8 @@ from repro.cluster import (
 
 
 def build_parser() -> argparse.ArgumentParser:
+    """Argparse parser for `python -m repro.cluster` (qps = requests/s,
+    latency SLOs in seconds, prices in $/hr)."""
     p = argparse.ArgumentParser(prog="python -m repro.cluster", description=__doc__)
     p.add_argument("--config", default="qwen3_14b", help="model config id")
     p.add_argument("--hw", default="h100",
@@ -292,6 +294,8 @@ def _fmt_row(label: str, s: dict, extra: str = "") -> str:
 
 
 def main(argv=None) -> None:
+    """Simulate (or `--plan`) the configured fleet and print per-pool
+    latency (seconds) / goodput / $-per-hour summaries."""
     args = build_parser().parse_args(argv)
     cfg = get_config(args.config)
     wl = Workload(

@@ -94,6 +94,8 @@ class RollingMeanWindow:
         self._q: deque[tuple[float, float]] = deque()
 
     def add(self, t: float, value: float) -> None:
+        """Record `value` observed at time `t` (seconds); drops samples
+        older than the window."""
         q = self._q
         q.append((t, float(value)))
         horizon = t - self.window
@@ -128,6 +130,7 @@ class RollingFlagWindow(RollingMeanWindow):
     apart)."""
 
     def add(self, t: float, flag: bool) -> None:
+        """Record a violation flag observed at time `t` (seconds)."""
         super().add(t, 1.0 if flag else 0.0)
 
     def frac(self, now: float) -> float:

@@ -82,6 +82,7 @@ class ChaosEvent:
     picks: tuple[float, ...] = ()
 
     def validate(self) -> "ChaosEvent":
+        """Range-check fields (t/duration in seconds); returns self."""
         if self.kind not in CHAOS_KINDS:
             raise ValueError(
                 f"unknown chaos kind {self.kind!r}; choose from {CHAOS_KINDS}")
@@ -117,11 +118,13 @@ class ChaosConfig:
 
     @property
     def enabled(self) -> bool:
+        """True when any event rate (events/s) is set or a script exists."""
         return bool(self.script) or any(
             r > 0.0 for r in (self.crash_rate, self.straggler_rate,
                               self.link_rate, self.node_failure_rate))
 
     def validate(self) -> "ChaosConfig":
+        """Range-check rates (events/s) and horizon (s); returns self."""
         for name in ("crash_rate", "straggler_rate", "link_rate",
                      "node_failure_rate"):
             if getattr(self, name) < 0.0:
@@ -222,6 +225,7 @@ class AdmissionConfig:
     probes: int = 3  # HALF-OPEN trial admissions
 
     def validate(self) -> "AdmissionConfig":
+        """Range-check rate (req/s), burst, window/cooloff (s); returns self."""
         if self.policy not in ADMISSION_POLICIES:
             raise ValueError(f"unknown admission policy {self.policy!r}; "
                              f"choose from {ADMISSION_POLICIES}")
@@ -276,9 +280,11 @@ class TokenBucket:
         return t + lateness
 
     def observe(self, rid: int, t: float, ok: bool) -> None:
+        """Terminal-outcome feedback at time `t` (seconds): ignored."""
         pass  # open-loop: the bucket does not react to outcomes
 
     def stats(self) -> dict:
+        """Door counters (requests): admitted / delayed / shed."""
         return {"policy": "token_bucket", "door_admitted": self.admitted,
                 "door_delayed": self.delayed, "door_shed": self.door_shed,
                 "breaker_opens": 0}
@@ -310,6 +316,8 @@ class CircuitBreaker:
         self._probes_sent = 0
 
     def offer(self, rid: int, t: float) -> float | None:
+        """Offer a request at time `t` (seconds): returns the admission
+        time (always `t`; the breaker never delays) or None = shed."""
         cfg = self.cfg
         if self.state == "closed":
             if (self.fails.count(t) >= cfg.min_samples
@@ -330,6 +338,8 @@ class CircuitBreaker:
         return t
 
     def observe(self, rid: int, t: float, ok: bool) -> None:
+        """Terminal outcome at time `t` (seconds); failures trip the
+        breaker, successful probes close it."""
         if self.state == "half_open" and rid in self._probe_rids:
             self._probe_rids.discard(rid)
             if not ok:
@@ -344,6 +354,7 @@ class CircuitBreaker:
             self.fails.add(t, not ok)
 
     def stats(self) -> dict:
+        """Door counters (requests) plus breaker opens and current state."""
         return {"policy": "breaker", "door_admitted": self.admitted,
                 "door_delayed": 0, "door_shed": self.door_shed,
                 "breaker_opens": self.opens, "breaker_state": self.state}

@@ -293,6 +293,7 @@ class ClusterResult:
 
     @property
     def makespan(self) -> float:
+        """Seconds from the first arrival to the last finish (0 if empty)."""
         if not self.records:
             return 0.0
         return (max(r.finish for r in self.records)

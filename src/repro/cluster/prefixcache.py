@@ -69,6 +69,7 @@ class PrefixCacheConfig:
     ttl: float | None = None
 
     def validate(self) -> None:
+        """Range-check budget (bytes / fraction of KV) and ttl (seconds)."""
         if self.budget_bytes is not None:
             if self.budget_bytes < 0:
                 raise ValueError("prefix-cache budget_bytes must be >= 0")
@@ -157,7 +158,8 @@ class ReplicaPrefixCache:
 
     def resident_tokens(self, req: SimRequest, now: float,
                         hit_frac: float) -> int:
-        """Read-only hit size for `req` at `now` (0 when absent/expired).
+        """Read-only hit size in tokens for `req` at `now` (seconds; 0
+        when absent/expired), capped by `hit_frac` (fraction of prompt).
         Never mutates, so routers may probe freely during placement."""
         key = prefix_key(req)
         e = self.entries.get(key) if key is not None else None
@@ -274,33 +276,40 @@ class FleetPrefixCache:
         self.caches: dict[int, ReplicaPrefixCache] = {}
 
     def register(self, idx: int, budget: float, cost) -> None:
+        """Attach a cache with `budget` bytes to replica `idx`."""
         self.caches[idx] = ReplicaPrefixCache(budget, self.pc.ttl, cost)
 
     def resident_tokens(self, idx: int, req: SimRequest, now: float) -> int:
+        """Read-only resident-prefix tokens on replica `idx` at `now` (s)."""
         c = self.caches.get(idx)
         return c.resident_tokens(req, now, self.hit_frac) if c else 0
 
     def use(self, idx: int, req: SimRequest, now: float) -> int:
+        """Dispatch-time reserve: count + touch the hit; returns tokens."""
         c = self.caches.get(idx)
         return c.use(req, now, self.hit_frac) if c else 0
 
     def uncount(self, idx: int, hit: int) -> None:
+        """Roll back a reserved hit of `hit` tokens (dispatch aborted)."""
         c = self.caches.get(idx)
         if c is not None:
             c.uncount(hit)
 
     def commit(self, idx: int, req: SimRequest, now: float) -> None:
+        """Prefill finished on `idx` at `now` (s): make the prefix resident."""
         c = self.caches.get(idx)
         if c is not None:
             c.commit(req, now)
 
     def invalidate(self, idx: int) -> None:
+        """Drop replica `idx`'s cache contents (drain/retire/crash)."""
         c = self.caches.get(idx)
         if c is not None:
             c.invalidate()
 
     @property
     def hits(self) -> int:
+        """Fleet-wide cache-hit count (requests with a nonzero hit)."""
         return sum(c.hits for c in self.caches.values())
 
     def stats(self) -> dict:

@@ -94,12 +94,16 @@ class Router:
     last_pick: dict = {}
 
     def pick(self, req: SimRequest, views: list[ReplicaView]) -> tuple[int, int]:
+        """Place `req`: returns (replica idx, cached prompt tokens)."""
         raise NotImplementedError
 
     def observe(self, idx: int, t: float, ttft: float) -> None:
+        """Completion feedback: replica `idx` served with `ttft` seconds
+        at time `t` (seconds). Default: ignored."""
         pass
 
     def on_retire(self, idx: int) -> None:
+        """Replica `idx` left the fleet: drop any per-replica state."""
         pass
 
 
@@ -110,6 +114,7 @@ class RoundRobinRouter(Router):
         self._i = 0
 
     def pick(self, req, views):
+        """Next replica in rotation, ignoring load."""
         v = views[self._i % len(views)]
         self._i += 1
         self.last_pick = {"router": self.name, "slot": self._i - 1}
@@ -120,6 +125,7 @@ class JoinShortestQueueRouter(Router):
     name = "jsq"
 
     def pick(self, req, views):
+        """Fewest outstanding requests; KV bytes then index break ties."""
         v = min(views, key=lambda v: (v.depth, v.kv_used, v.idx))
         self.last_pick = {"router": self.name, "depth": v.depth}
         return v.idx, 0
@@ -129,6 +135,7 @@ class LeastKVLoadRouter(Router):
     name = "least_kv"
 
     def pick(self, req, views):
+        """Lowest KV occupancy (fraction of capacity); depth breaks ties."""
         v = min(views, key=lambda v: (v.kv_frac, v.depth, v.idx))
         self.last_pick = {"router": self.name, "kv_frac": v.kv_frac,
                           "depth": v.depth}
@@ -189,6 +196,9 @@ class AffinityRouter(Router):
         return v if v.depth <= jsq.depth + 1 else None
 
     def pick(self, req, views):
+        """Session home if alive, else warmest prefix-cache replica, else
+        JSQ; returns (idx, modeled cached tokens — 0 when the engine
+        computes residency itself)."""
         eligible = {v.idx for v in views}
         home = self._home.get(req.session, -1) if req.session >= 0 else -1
         if home in eligible:
@@ -219,6 +229,7 @@ class AffinityRouter(Router):
         return v.idx, 0
 
     def on_retire(self, idx):
+        """Unpin every session homed on the retired replica."""
         self._home = {s: r for s, r in self._home.items() if r != idx}
 
 
@@ -240,21 +251,25 @@ class SLODebtRouter(Router):
         self._obs: dict[int, RollingFlagWindow] = {}  # per-replica debt
 
     def observe(self, idx, t, ttft):
+        """Record whether `ttft` (seconds) at time `t` violated the SLO."""
         if idx not in self._obs:
             self._obs[idx] = RollingFlagWindow(self.window)
         self._obs[idx].add(t, ttft > self.slo_ttft)
 
     def debt(self, idx: int, now: float) -> float:
+        """Rolling TTFT-violation fraction for replica `idx` at `now` (s)."""
         w = self._obs.get(idx)
         return w.frac(now) if w is not None else 0.0
 
     def on_retire(self, idx):
+        """Drop the retired replica's debt window (unbounded otherwise)."""
         # a retired replica never reappears in views: its window would
         # otherwise sit in _obs forever (unbounded growth on long diurnal
         # traces with many joins/leaves)
         self._obs.pop(idx, None)
 
     def pick(self, req, views):
+        """Lowest debt fraction; depth, KV bytes, then index break ties."""
         now = max(v.now for v in views)
         v = min(views, key=lambda v: (self.debt(v.idx, now), v.depth,
                                       v.kv_used, v.idx))

@@ -7,7 +7,7 @@ the exact published numbers, plus `reduced()` variants for CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any
 
 import jax.numpy as jnp

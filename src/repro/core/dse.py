@@ -27,7 +27,6 @@ from repro.core.hardware import (
     HardwareSpec,
     MemLevel,
     NDR_X8,
-    NetLevel,
     NVLINK3,
     XDR_X8,
     TB,

@@ -108,7 +108,8 @@ def collective_summary(hlo_text: str) -> dict:
         )
         a["count"] += 1
         a["bytes"] += op.bytes
-    out = sorted(agg.values(), key=lambda a: -a["bytes"])
+    out = [a for _, a in
+           sorted(agg.items(), key=lambda kv: (-kv[1]["bytes"], kv[0]))]
     return {
         "ops": out,
         "once_bytes": sum(a["bytes"] for a in out if a["loop_depth"] == 0),

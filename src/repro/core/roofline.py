@@ -13,7 +13,7 @@ compute term dominates, "memory" (DRAM/HBM) or "l2" otherwise.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.hardware import HardwareSpec
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.configs.base import ParallelConfig, ShapeSpec
+from repro.configs.base import ShapeSpec
 from repro.parallel.axes import ShardingRules, make_rules
 
 

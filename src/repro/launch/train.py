@@ -14,9 +14,8 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
-from repro.configs import SMOKE_SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import ParallelConfig, TrainConfig
 from repro.data.pipeline import Prefetcher, SyntheticLM
 from repro.models.transformer import Model

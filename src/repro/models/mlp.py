@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import jax
 
-from repro.configs.base import ModelConfig
 from repro.models.layers import activation
 from repro.models.params import PD
 from repro.parallel.axes import shard

@@ -254,7 +254,7 @@ def validate_trace(events) -> list[str]:
         starts = [t0 for t0, _, _ in spans]
         if any(b < a - 1e-9 for a, b in zip(starts, starts[1:])):
             problems.append(f"rid {rid!r}: phase spans out of order")
-    for rid in set(rid_spans) | set(rid_terms):
+    for rid in sorted(set(rid_spans) | set(rid_terms)):
         terms = rid_terms.get(rid, [])
         if len(terms) != 1:
             problems.append(

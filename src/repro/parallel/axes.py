@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -14,13 +14,10 @@ When no mesh is active this degrades to a pure quantize/dequantize round trip
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.parallel.axes import current_mesh, current_rules
 
 
 def _q8(x: jax.Array):

@@ -14,14 +14,12 @@ adequate for the near-equal-length request mixes the benchmarks use.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.models.transformer import Model
 
 

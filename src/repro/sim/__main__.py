@@ -44,6 +44,7 @@ from repro.sim import (
 
 
 def build_parser() -> argparse.ArgumentParser:
+    """Argparse parser for `python -m repro.sim` (qps = requests/second)."""
     p = argparse.ArgumentParser(prog="python -m repro.sim", description=__doc__)
     p.add_argument("--config", default="qwen3_14b", help="model config id")
     p.add_argument("--hw", default="h100", help="hardware target (see core.hardware)")
@@ -116,6 +117,7 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None) -> None:
+    """Run one serving simulation (latencies in seconds) and/or the sweep."""
     args = build_parser().parse_args(argv)
     cfg = get_config(args.config)
     hw = get_hardware(args.hw)

@@ -40,7 +40,6 @@ from collections import deque
 
 import numpy as np
 
-from repro.obs.tracer import NULL_TRACER
 from repro.sim.costmodel import ServingCostModel
 from repro.sim.scheduler import (
     _MAX_ITERATIONS,
@@ -119,18 +118,22 @@ class VecReplicaSim(ReplicaSim):
     # ------------------------------------------------------------- inspection
     @property
     def has_work(self) -> bool:
+        """True while any request is queued or running."""
         return bool(self._pendq or self._runrows)
 
     @property
     def queue_len(self) -> int:
+        """Requests waiting for admission (count)."""
         return len(self._pendq)
 
     @property
     def live(self) -> int:
+        """Admitted requests currently holding KV (count)."""
         return len(self._runrows)
 
     @property
     def kv_used(self) -> float:
+        """KV-cache bytes held by live requests right now."""
         # recomputed lazily: the cluster reads this once per routed
         # arrival (JSQ tie-breaks on it), which without the cache costs
         # O(slots) per view per arrival across the whole fleet
@@ -149,6 +152,8 @@ class VecReplicaSim(ReplicaSim):
 
     # ---------------------------------------------------------------- enqueue
     def push(self, req: SimRequest, *, cached: int = 0, generated: int = 0) -> ReqRecord:
+        """Enqueue a request; `cached`/`generated` (tokens) pre-warm its
+        context for crash re-dispatch and KV handoff. Returns its record."""
         self._check_push(req, cached, generated)
         hi = req.prompt + req.output
         if len(self._kvt) <= hi:
@@ -172,6 +177,8 @@ class VecReplicaSim(ReplicaSim):
         return rec
 
     def kill(self) -> list[tuple[SimRequest, int, int, bool]]:
+        """Crash the replica: drop all state and return the displaced
+        requests as (req, cached tokens, generated tokens, started)."""
         out: list[tuple[SimRequest, int, int, bool]] = []
         for i in [*self._runrows, *self._pendq]:
             rec = self._rec_col[i]
@@ -185,6 +192,8 @@ class VecReplicaSim(ReplicaSim):
         return out
 
     def evict_pending(self, *, include_staged: bool = False) -> list[SimRequest]:
+        """Remove and return never-admitted queued requests (drain
+        re-routing); `include_staged` also evicts KV-handoff-staged ones."""
         keep: deque[int] = deque()
         out: list[SimRequest] = []
         for i in self._pendq:
@@ -207,12 +216,15 @@ class VecReplicaSim(ReplicaSim):
         return self._vstep()
 
     def run_until(self, t: float) -> list[ReqRecord]:
+        """Run iterations while `now < t` (seconds; the last iteration may
+        overshoot) and return records completed along the way."""
         out: list[ReqRecord] = []
         for _, recs in self.advance_chunk(t):
             out += recs
         return out
 
     def run(self) -> list[ReqRecord]:
+        """Run until no work remains; returns all completed records."""
         out: list[ReqRecord] = []
         for _, recs in self.advance_chunk(_INF):
             out += recs
@@ -532,6 +544,8 @@ class VecReplicaSim(ReplicaSim):
             ctx_mean = sum(cached[i] + 1 for i in decoders) / len(decoders)
             t_iter += cost.decode_step_time(len(decoders), ctx_mean)
             res.decode_steps += 1
+        # lint: disable-next=U303 -- exact sentinel: a priced iteration is
+        # strictly positive; 0.0 means nothing was scheduled
         if t_iter == 0.0 and not pendq and not rr:
             return []
         t_iter = self._slowed(t_iter)

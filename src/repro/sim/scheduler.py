@@ -87,6 +87,7 @@ class ReqRecord:
 
     @property
     def ttft(self) -> float:
+        """Time to first token, seconds from arrival."""
         return self.first_token - self.arrival
 
     @property
@@ -98,6 +99,7 @@ class ReqRecord:
 
     @property
     def e2e(self) -> float:
+        """End-to-end latency, seconds from arrival to last token."""
         return self.finish - self.arrival
 
 
@@ -116,6 +118,7 @@ class SimResult:
 
     @property
     def makespan(self) -> float:
+        """Seconds from the first arrival to the last finish (0 if empty)."""
         if not self.records:
             return 0.0
         return max(r.finish for r in self.records) - min(r.arrival for r in self.records)
@@ -196,18 +199,22 @@ class ReplicaSim:
     # ------------------------------------------------------------- inspection
     @property
     def has_work(self) -> bool:
+        """True while any request is queued, admitted, or mid-batch."""
         return bool(self._pending or self._running or self._batch)
 
     @property
     def queue_len(self) -> int:
+        """Requests waiting for admission (count)."""
         return len(self._pending)
 
     @property
     def live(self) -> int:
+        """Admitted requests currently holding KV (count)."""
         return len(self._running) + len(self._batch)
 
     @property
     def kv_used(self) -> float:
+        """KV-cache bytes held by live requests right now."""
         return sum(self.cost.kv_bytes(r.cached)
                    for r in self._running + self._batch)
 
@@ -532,11 +539,13 @@ class ReplicaSim:
                     prefills.append((r, r.prefill_target - r.cached))
 
         # ---- enforce the KV-capacity invariant by preempting youngest ----
+        # lint: disable-next=D104 -- identity map: keys are only ever looked
+        # up, iteration stays in `running` (admission) order
         planned = {id(r): r.cached for r in running}
         for r in decoders:
-            planned[id(r)] += 1
+            planned[id(r)] += 1  # lint: disable=D104 -- identity lookup
         for r, take in prefills:
-            planned[id(r)] += take
+            planned[id(r)] += take  # lint: disable=D104 -- identity lookup
         projected = sum(cost.kv_bytes(c) for c in planned.values())
         while projected > cap and len(running) > 1:
             victim = max(running, key=lambda r: r.admit_seq)
@@ -544,7 +553,7 @@ class ReplicaSim:
             if victim in decoders:
                 decoders.remove(victim)
             prefills = [(r, n) for r, n in prefills if r is not victim]
-            del planned[id(victim)]
+            del planned[id(victim)]  # lint: disable=D104 -- identity lookup
             victim.cached = 0
             victim.rec.preemptions += 1
             res.preemptions += 1
@@ -575,6 +584,8 @@ class ReplicaSim:
             ctx_mean = sum(r.cached + 1 for r in decoders) / len(decoders)
             t_iter += cost.decode_step_time(len(decoders), ctx_mean)
             res.decode_steps += 1
+        # lint: disable-next=U303 -- exact sentinel: a priced iteration is
+        # strictly positive; 0.0 means nothing was scheduled
         if t_iter == 0.0 and not pending and not running:
             return []
         t_iter = self._slowed(t_iter)

@@ -74,6 +74,7 @@ class LengthDist:
     hi: int = 131072
 
     def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Draw `n` lengths (tokens), clipped to [lo, hi]."""
         if self.kind == "fixed":
             vals = np.full(n, self.mean)
         elif self.kind == "lognormal":
@@ -115,6 +116,9 @@ class Workload:
 
     # ------------------------------------------------------------- generation
     def generate(self) -> list[SimRequest]:
+        """Materialize the request stream: arrival times in seconds from
+        t=0, prompt/output lengths in tokens; pure function of the spec
+        (seeded — same spec, same stream)."""
         if self.trace_path is not None:
             return self._replay_trace()
         rng = np.random.default_rng(self.seed)

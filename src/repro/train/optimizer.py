@@ -12,7 +12,6 @@ Distributed-optimization features (DESIGN.md §7, beyond-paper):
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -15,21 +15,15 @@ Fault-tolerance model (DESIGN.md §2):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs.base import ParallelConfig, TrainConfig
 from repro.models.transformer import Model
-from repro.parallel.axes import (
-    current_mesh,
-    logical_spec,
-    sanitize_spec_tree,
-    use_mesh,
-)
+from repro.parallel.axes import logical_spec, sanitize_spec_tree, use_mesh
 from repro.train.optimizer import adamw_init, opt_state_specs
 from repro.train.train_step import make_train_step
 

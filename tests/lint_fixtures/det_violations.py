@@ -1,0 +1,43 @@
+"""Fixture: D-series determinism violations, one marker comment per code.
+
+Never imported — tests/test_lint.py lints this SOURCE under a synthetic
+`src/repro/sim/...` path so the subpackage-scoped rules apply. Expected
+findings live in tests/lint_fixtures/expected.json.
+"""
+
+import heapq
+import random
+import time
+import uuid
+
+import numpy as np
+
+
+def unseeded():
+    """Draws entropy three forbidden ways."""
+    rng = np.random.default_rng()  # D101: no seed -> OS entropy
+    token = uuid.uuid4()  # D101: ambient entropy
+    jitter = random.random()  # D101: shared global RNG stream
+    return rng, token, jitter
+
+
+def wall_clock():
+    """Reads the host clock from inside the simulator."""
+    return time.perf_counter()  # D102: wall clock in a deterministic layer
+
+
+def unordered(pending, table):
+    """Feeds set iteration order into order-sensitive constructs."""
+    for item in set(pending):  # D103: iterating a set
+        del item
+    order = list({x for x in table})  # D103: freezes set-comp order
+    best = max(table.values(), key=lambda v: v[0])  # D103: keyed, ties unstable
+    heap = []
+    for item in set(pending) | {0}:  # D103: set-union iteration
+        heapq.heappush(heap, item)  # D103: heap order inherits set order
+    return order, best, heap
+
+
+def identity_keys(requests):
+    """Keys a mapping on object addresses."""
+    return {id(r): r for r in requests}  # D104: address-dependent key

@@ -1,0 +1,15 @@
+"""Fixture: P203 observational-write violation.
+
+Linted under a synthetic `src/repro/obs/...` path by tests/test_lint.py.
+Writes to `st` are exempt (annotated with a type this module defines);
+the write to the unannotated `engine` parameter is the violation.
+"""
+
+
+class _LocalState:
+    count: int = 0
+
+
+def observe(engine, st: _LocalState):
+    st.count = 1  # exempt: module-own state object
+    engine.traced = True  # P203: writes into the observed engine

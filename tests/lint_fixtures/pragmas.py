@@ -1,0 +1,17 @@
+"""Fixture: every pragma form suppressing a real violation -> ZERO findings.
+
+Exercises same-line `disable=`, `disable-next=` (including its
+skip-over-comments behavior), and `disable-file=`.
+"""
+# lint: disable-file=D104
+
+import numpy as np
+
+
+def seeded_elsewhere():
+    """Each violation below is individually suppressed."""
+    rng = np.random.default_rng()  # lint: disable=D101 -- fixture: same-line
+    # lint: disable-next=U303 -- fixture: next-line form; the comment
+    # between pragma and statement is skipped on purpose
+    exact = rng.random() == 0.5
+    return {id(rng): exact}  # D104 suppressed file-wide

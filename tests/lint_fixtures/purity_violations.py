@@ -1,0 +1,26 @@
+"""Fixture: P-series purity violations (P201/P202/P204).
+
+Never imported — the P202 dataclass would raise at class-definition time,
+which is exactly the hazard the rule documents. Linted under a synthetic
+`src/repro/cluster/...` path by tests/test_lint.py.
+"""
+
+from dataclasses import dataclass
+
+
+def accumulate(x, acc=[]):  # P201: mutable default shared across calls
+    """Appends to a default list that outlives the call."""
+    acc.append(x)
+    return acc
+
+
+@dataclass
+class SweepConfig:
+    name: str = "sweep"
+    points: dict = {}  # P202: use field(default_factory=dict)
+
+
+def retune(cfg, gain):
+    """Writes a new gain into the caller's config object."""
+    cfg.gain = gain  # P204: mutates a shared config in place
+    return cfg

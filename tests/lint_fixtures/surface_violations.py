@@ -1,0 +1,26 @@
+"""Fixture: U-series surface violations (U301/U302/U303).
+
+Linted under a synthetic `src/repro/sim/...` path by tests/test_lint.py.
+"""
+
+
+def price(duration_s, rate):  # U301: public, no docstring at all
+    return duration_s * rate
+
+
+def ratio(num_tokens, window_s):
+    """Share of the window spent decoding."""  # U301: no unit vocabulary
+    return num_tokens / window_s
+
+
+def risky():
+    """Guarded parse that eats every failure."""
+    try:
+        return 1
+    except:  # noqa: E722  # U302: bare except
+        return 0
+
+
+def is_idle(util):
+    """True when utilization (fraction of capacity) is exactly zero."""
+    return util == 0.0  # U303: float-literal equality

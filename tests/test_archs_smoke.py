@@ -7,7 +7,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, SMOKE_SHAPES, get_config, input_specs, applicable, SHAPES
+from repro.configs import ARCHS, get_config, input_specs, applicable, SHAPES
 from repro.models.transformer import Model
 
 # JAX compile-heavy: excluded from the fast tier (pytest -m "not slow")

@@ -51,7 +51,6 @@ def test_flash_vjp_value_and_grads(window):
 
 def test_decode_swa_ring_buffer_positions():
     """Ring-buffer decode must attend exactly the last `window` tokens."""
-    import dataclasses
 
     from repro.configs import get_config
     from repro.models.transformer import Model

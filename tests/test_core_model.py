@@ -1,14 +1,13 @@
 """Optimus analytical-core properties: roofline, comm (eq 3/4), memory
 (eq 1/2), KV cache (§3.5), planner — plus hypothesis property tests."""
 
-import math
 
 import pytest
 from hypkit import given, settings, st
 
 from repro.configs import get_config
 from repro.core import comm as C
-from repro.core.hardware import A100_80G, H100_SXM, NVLINK3, TPU_V5E
+from repro.core.hardware import A100_80G, NVLINK3
 from repro.core.kvcache import kv_cache_bytes, recurrent_state_bytes
 from repro.core.memory import activation_memory, training_memory
 from repro.core.paper_data import GPT_CONFIGS, LLAMA2_CONFIGS

@@ -1,0 +1,244 @@
+"""Tests for repro.lint: rule findings, pragmas, baseline, and the CLI gate.
+
+The fixture modules under tests/lint_fixtures/ are never imported — their
+SOURCE is linted under synthetic src/repro/<subpackage>/ paths so the
+subpackage-scoped rules (D102, P203, U301) apply. The golden findings
+live in tests/lint_fixtures/expected.json.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.lint import all_rules, lint_file, lint_paths
+from repro.lint.__main__ import main
+from repro.lint.baseline import (
+    BASELINE_VERSION,
+    DEFAULT_BASELINE,
+    load_baseline,
+    new_findings,
+    write_baseline,
+)
+from repro.lint.report import render_json, render_text
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "lint_fixtures"
+
+# fixture file -> synthetic path scoping the subpackage-sensitive rules
+FIXTURE_PATHS = {
+    "det_violations.py": "src/repro/sim/det_violations.py",
+    "purity_violations.py": "src/repro/cluster/purity_violations.py",
+    "obs_violations.py": "src/repro/obs/obs_violations.py",
+    "surface_violations.py": "src/repro/sim/surface_violations.py",
+    "pragmas.py": "src/repro/sim/pragmas.py",
+    "clean.py": "src/repro/sim/clean.py",
+    "e001_syntax.py.txt": "src/repro/sim/e001_syntax.py",
+}
+
+
+def lint_fixture(name):
+    src = (FIXTURES / name).read_text()
+    return lint_file(FIXTURE_PATHS[name], source=src)
+
+
+# ---------------------------------------------------------------- findings
+
+
+def test_golden_expected_findings():
+    """Every fixture produces exactly the checked-in (line, code) set."""
+    expected = json.loads((FIXTURES / "expected.json").read_text())
+    assert set(expected) == set(FIXTURE_PATHS), "expected.json out of sync"
+    for name, want in expected.items():
+        got = [[f.line, f.code] for f in lint_fixture(name)]
+        assert got == want, f"{name}: {got} != {want}"
+
+
+def test_fixtures_cover_every_rule_code():
+    """The fixture corpus exercises the full rule catalog (plus E001)."""
+    codes = {f.code for name in FIXTURE_PATHS for f in lint_fixture(name)}
+    assert codes == {r.code for r in all_rules()} | {"E001"}
+
+
+def test_clean_and_pragma_fixtures_are_clean():
+    assert lint_fixture("clean.py") == []
+    assert lint_fixture("pragmas.py") == []
+
+
+def test_rules_are_documented_and_unique():
+    rules = all_rules()
+    assert len({r.code for r in rules}) == len(rules)
+    for r in rules:
+        assert r.summary and r.rationale, f"{r.code} lacks catalog text"
+
+
+def test_test_files_are_exempt():
+    """Default `applies` skips test files — float == is fine in tests."""
+    src = "assert ttft == 0.25\n"
+    assert lint_file("tests/test_something.py", source=src) == []
+    assert lint_file("src/repro/sim/x.py", source=src) != []
+
+
+# ----------------------------------------------------------------- pragmas
+
+
+def test_pragma_wrong_code_does_not_suppress():
+    src = "import numpy as np\nr = np.random.default_rng()  # lint: disable=U303\n"
+    found = lint_file("src/repro/sim/x.py", source=src)
+    assert [f.code for f in found] == ["D101"]
+
+
+def test_pragma_disable_next_skips_comment_lines():
+    src = (
+        "# lint: disable-next=D104\n"
+        "# another comment in between\n"
+        "k = id(object())\n"
+    )
+    assert lint_file("src/repro/sim/x.py", source=src) == []
+
+
+def test_pragma_disable_file():
+    src = "# lint: disable-file=D104\nk = id(object())\nj = id(list())\n"
+    assert lint_file("src/repro/sim/x.py", source=src) == []
+
+
+def test_select_and_ignore_prefixes():
+    found = lint_fixture("det_violations.py")
+    only_d = lint_file(FIXTURE_PATHS["det_violations.py"],
+                       source=(FIXTURES / "det_violations.py").read_text(),
+                       select="D101,D102")
+    assert {f.code for f in only_d} == {"D101", "D102"}
+    no_d = lint_file(FIXTURE_PATHS["det_violations.py"],
+                     source=(FIXTURES / "det_violations.py").read_text(),
+                     ignore="D")
+    assert not any(f.code.startswith("D") for f in no_d)
+    assert len(found) > len(only_d)
+
+
+# ---------------------------------------------------------------- baseline
+
+
+def test_baseline_roundtrip_absorbs_findings(tmp_path):
+    findings = lint_fixture("det_violations.py")
+    assert findings
+    bl_path = tmp_path / "bl.json"
+    write_baseline(findings, bl_path)
+    assert new_findings(findings, load_baseline(bl_path)) == []
+
+
+def test_baseline_is_line_number_invariant(tmp_path):
+    """Shifting an offending line (unrelated edits) must not break the gate."""
+    src = "import numpy as np\nr = np.random.default_rng()\n"
+    shifted = "# a new leading comment\n" + src
+    bl_path = tmp_path / "bl.json"
+    write_baseline(lint_file("src/repro/sim/x.py", source=src), bl_path)
+    later = lint_file("src/repro/sim/x.py", source=shifted)
+    assert new_findings(later, load_baseline(bl_path)) == []
+
+
+def test_baseline_counts_cap_duplicates(tmp_path):
+    """A second identical offending line exceeds the baselined count."""
+    one = "r = id(object())\n"
+    bl_path = tmp_path / "bl.json"
+    write_baseline(lint_file("src/repro/sim/x.py", source=one), bl_path)
+    two = one + one
+    leftover = new_findings(lint_file("src/repro/sim/x.py", source=two),
+                            load_baseline(bl_path))
+    assert [f.code for f in leftover] == ["D104"]
+
+
+def test_baseline_version_mismatch_raises(tmp_path):
+    p = tmp_path / "bl.json"
+    p.write_text(json.dumps({"version": 999, "findings": {}}))
+    with pytest.raises(ValueError, match="version"):
+        load_baseline(p)
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.json") == {}
+
+
+# --------------------------------------------------------------- reporters
+
+
+def test_render_text_and_json_shape():
+    findings = lint_fixture("surface_violations.py")
+    text = render_text(findings)
+    assert "U302" in text and "finding(s)" in text
+    data = json.loads(render_json(findings))
+    assert all(set(d) >= {"path", "line", "col", "code", "message"}
+               for d in data)
+    assert [d["code"] for d in data] == [f.code for f in findings]
+
+
+# ---------------------------------------------------------------- CLI gate
+
+
+def _write_violation(tmp_path):
+    """A seeded synthetic violation, as the CI gate would see it."""
+    bad = tmp_path / "bad.py"
+    bad.write_text("import numpy as np\nr = np.random.default_rng()\n")
+    return bad
+
+
+def test_cli_fails_on_synthetic_violation(tmp_path, capsys):
+    """The acceptance criterion: the gate exits 1 on a fresh violation."""
+    bad = _write_violation(tmp_path)
+    rc = main([str(bad), "--no-baseline"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "D101" in out and "default_rng" in out
+
+
+def test_cli_clean_exits_zero(tmp_path, capsys):
+    good = tmp_path / "good.py"
+    good.write_text('"""Nothing to see."""\n')
+    assert main([str(good), "--check"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_write_baseline_then_gate(tmp_path, capsys):
+    """--write-baseline absorbs today's findings; the gate then passes."""
+    bad = _write_violation(tmp_path)
+    bl = tmp_path / "bl.json"
+    assert main([str(bad), "--baseline", str(bl), "--write-baseline"]) == 0
+    assert main([str(bad), "--baseline", str(bl), "--check"]) == 0
+    assert main([str(bad), "--baseline", str(bl), "--no-baseline"]) == 1
+    capsys.readouterr()
+
+
+def test_cli_json_format(tmp_path, capsys):
+    bad = _write_violation(tmp_path)
+    rc = main([str(bad), "--no-baseline", "--format", "json"])
+    assert rc == 1
+    data = json.loads(capsys.readouterr().out)
+    assert data[0]["code"] == "D101"
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for r in all_rules():
+        assert r.code in out
+
+
+# ------------------------------------------------------------ live tree
+
+
+def test_live_tree_clean_modulo_baseline():
+    """src/repro/ itself passes the gate against the checked-in baseline.
+
+    This is the same check scripts/verify.sh and the CI lint job run; a
+    failure here means a new contract violation landed without a fix,
+    pragma, or deliberate baseline update.
+    """
+    findings = lint_paths([REPO / "src" / "repro"])
+    baseline = load_baseline(REPO / DEFAULT_BASELINE)
+    fresh = new_findings(findings, baseline)
+    assert fresh == [], render_text(fresh)
+
+
+def test_shipped_baseline_stays_near_empty():
+    """The baseline is accepted LEGACY, not a dumping ground (<= 10)."""
+    baseline = load_baseline(REPO / DEFAULT_BASELINE)
+    assert sum(baseline.values()) <= 10

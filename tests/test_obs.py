@@ -6,7 +6,6 @@ metric parity with `summarize_cluster`, and trace-vs-billing consistency
 (t0/horizon, provisioned extents == replica-hours)."""
 
 import json
-import math
 from collections import Counter
 
 import numpy as np

@@ -5,7 +5,6 @@ calibrate three scalar factors, the paper fits per-kernel utilization
 clusters) but tight enough to catch regressions in the model."""
 
 import numpy as np
-import pytest
 
 from repro.core.hardware import A100_80G, H100_SXM
 from repro.core.paper_data import GPT_CONFIGS, LLAMA2_CONFIGS, TABLE1, TABLE2, TABLE4

@@ -20,7 +20,6 @@ from repro.cluster import (
     ReplicaSpec,
     ReplicaView,
     make_router,
-    plan_capacity,
     simulate_cluster,
     summarize_cluster,
 )
